@@ -1,0 +1,51 @@
+"""Fig. 6: (a) embedding-size sweep; (b) EL:PL layer-ratio sweep."""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.data import make_dataset
+
+from benchmarks.harness import (build_method, hetero_arches, train_eval,
+                                vertical_partition)
+
+
+def run(steps: int = 120, save=None):
+    ds = make_dataset("fmnist_like", n_train=2048, n_test=512)
+    C = 4
+    nf = [v.shape[-1]
+          for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    rows = []
+    for d_embed in (16, 32, 64, 128, 256):
+        arches = hetero_arches(C, ds.n_classes, d_embed=d_embed)
+        method = build_method("easter", arches, nf, ds.n_classes,
+                              d_embed=d_embed)
+        r = train_eval(method, ds, C, steps=steps)
+        rows.append({"sweep": "embed_size", "value": d_embed,
+                     "acc_avg": round(r["acc_avg"], 4)})
+        print(f"fig6a_embed{d_embed},{r['us_per_step']:.0f},"
+              f"acc={r['acc_avg']:.4f}")
+    for el_pl in ((2, 1), (1, 1), (1, 2)):
+        arches = hetero_arches(C, ds.n_classes, el_pl=el_pl)
+        method = build_method("easter", arches, nf, ds.n_classes)
+        r = train_eval(method, ds, C, steps=steps)
+        rows.append({"sweep": "el_pl", "value": f"{el_pl[0]}:{el_pl[1]}",
+                     "acc_avg": round(r["acc_avg"], 4)})
+        print(f"fig6b_elpl{el_pl[0]}to{el_pl[1]},{r['us_per_step']:.0f},"
+              f"acc={r['acc_avg']:.4f}")
+    if save:
+        with open(save, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--save", default=None)
+    a = ap.parse_args()
+    run(steps=a.steps, save=a.save)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Shared training harness for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EasterConfig
+from repro.core.baselines import AggVFL, LocalOnly, SplitVFL, make_train_step
+from repro.core.party_models import PartyArch
+from repro.core.protocol import EasterClassifier
+from repro.data import make_dataset, vertical_partition
+from repro.data.pipeline import batch_iterator, slice_hw
+
+
+def hetero_arches(C: int, n_cls: int, d_embed: int = 128,
+                  el_pl=(2, 1)) -> List[PartyArch]:
+    """Heterogeneous party zoo (paper §V-A2): different widths/depths.
+    el_pl: (embedding layers, prediction layers) depth ratio (Fig. 6b)."""
+    widths = [(256, 128), (128, 64), (512, 256), (96, 48)]
+    el, pl = el_pl
+    out = []
+    for k in range(C):
+        w = widths[k % 4]
+        emb = tuple(list(w) * el)[:max(1, el * len(w) // 1)][:el + 1]
+        dec = tuple([w[-1]] * pl)
+        out.append(PartyArch("mlp", emb, dec, d_embed, n_cls))
+    return out
+
+
+def homo_arches(C: int, n_cls: int, d_embed: int = 128) -> List[PartyArch]:
+    return [PartyArch("mlp", (256, 128), (128,), d_embed, n_cls)
+            for _ in range(C)]
+
+
+def build_method(name: str, arches, nf, n_cls, d_embed=128,
+                 grad_mode="easter"):
+    if name == "easter":
+        return EasterClassifier(
+            EasterConfig(num_passive=len(arches) - 1, d_embed=d_embed),
+            arches, nf, grad_mode=grad_mode)
+    if name == "pyvertical":
+        return SplitVFL(arches, nf, n_cls)
+    if name == "c_vfl":
+        return SplitVFL(arches, nf, n_cls, compress_frac=0.25)
+    if name == "agg_vfl":
+        return AggVFL(arches, nf)
+    if name == "local":
+        return LocalOnly(arches, nf)
+    raise KeyError(name)
+
+
+def train_eval(method, ds, C: int, *, steps: int = 150, lr: float = 1e-3,
+               batch: int = 128, seed: int = 0) -> Dict:
+    params = method.init_params(jax.random.PRNGKey(seed))
+    init_opt, step = make_train_step(method, "adam", lr)
+    opt_state = init_opt(params)
+    it = batch_iterator(ds.x_train, ds.y_train, batch, seed=seed)
+    masks_fn = getattr(method, "masks", None)
+    t0 = time.perf_counter()
+    n_done = 0
+    for i in range(steps):
+        xb, yb = next(it)
+        xs = [jnp.asarray(v)
+              for v in vertical_partition(xb, C, ds.image_hw)]
+        m = masks_fn(batch, i) if masks_fn else None
+        params, opt_state, total, per = step(params, opt_state, xs,
+                                             jnp.asarray(yb), m)
+        n_done += 1
+    jax.block_until_ready(total)
+    dt = time.perf_counter() - t0
+    xs_te = [jnp.asarray(v)
+             for v in vertical_partition(ds.x_test, C, ds.image_hw)]
+    acc = np.asarray(method.accuracy(params, xs_te, jnp.asarray(ds.y_test)))
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(params))
+    return {"acc": acc, "acc_avg": float(acc.mean()),
+            "time_s": dt, "us_per_step": dt / n_done * 1e6,
+            "bytes_per_round": method.bytes_per_round(batch),
+            "n_params": n_params,
+            "mem_bytes": n_params * 4 * 3}  # params + adam m,v

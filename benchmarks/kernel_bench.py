@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: XLA fallback path timings on CPU (the Pallas
+kernels themselves are TPU-targeted; interpret mode is not a perf number,
+so here we time the production XLA fallbacks the models run on CPU and
+record the Pallas tile configs that the TPU path would use)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import chunked_attention, dot_attention
+from repro.core import aggregation
+from repro.models.griffin import rglru_scan as rglru_xla
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0] if isinstance(fn(*args), tuple) else fn(*args)
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 1, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 2, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 2, hd))
+
+    f_dot = jax.jit(lambda q, k, v: dot_attention(q, k, v, causal=True))
+    f_chk = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, q_chunk=256, kv_chunk=256))
+    us = _time(f_dot, q, k, v)
+    print(f"attn_dot_S{S},{us:.0f},flops={4 * B * S * S * H * hd:.2e}")
+    us = _time(f_chk, q, k, v)
+    print(f"attn_chunked_S{S},{us:.0f},tile=256x256")
+
+    Ea = jax.random.normal(key, (4096, 128))
+    Ep = jax.random.normal(key, (3, 4096, 128))
+    M = jnp.zeros_like(Ep)
+    f_agg = jax.jit(lambda a, p, m: aggregation.blind_and_aggregate(
+        jnp.concatenate([a[None], p + m]), None))
+    us = _time(f_agg, Ea, Ep, M)
+    print(f"blind_agg_4096x128,{us:.0f},bytes={Ea.size * 4 * 5:.2e}")
+
+    from repro.models import griffin
+    p = griffin.init_rglru(key, 256, 256, jnp.float32)
+    x = jax.random.normal(key, (2, 512, 256))
+    f_lru = jax.jit(lambda x: griffin.rglru_scan(p, x)[0])
+    us = _time(f_lru, x)
+    print(f"rglru_xla_assoc_scan_L512,{us:.0f},width=256")
+
+
+if __name__ == "__main__":
+    run()

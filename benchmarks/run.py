@@ -1,0 +1,69 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines; saves JSON artifacts under
+experiments/bench/.  ``--quick`` shrinks budgets for CI-style runs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step budgets")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,table4,table5,table6,fig6,"
+                         "roofline,kernels,security")
+    args = ap.parse_args()
+    steps = 60 if args.quick else 150
+    os.makedirs("experiments/bench", exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    from benchmarks import (fig6_ablation, table2_4_accuracy, table5_comm,
+                            table6_scaling)
+
+    if want("table2"):
+        table2_4_accuracy.run("hetero", steps=steps,
+                              save="experiments/bench/table2.json")
+    if want("table4"):
+        table2_4_accuracy.run("homo", steps=steps,
+                              save="experiments/bench/table4.json")
+    if want("table5"):
+        table5_comm.run(steps=max(40, steps // 2),
+                        save="experiments/bench/table5.json")
+    if want("table6"):
+        table6_scaling.run(steps=max(30, steps // 2),
+                           save="experiments/bench/table6.json")
+    if want("fig6"):
+        fig6_ablation.run(steps=max(40, steps // 2),
+                          save="experiments/bench/fig6.json")
+    if want("roofline"):
+        from benchmarks import roofline
+        rows = roofline.table()
+        print(roofline.render(rows))
+        import json
+        with open("experiments/bench/roofline.json", "w") as f:
+            json.dump(rows, f, indent=1)
+        for r in rows:
+            dom = r[f"{r['bottleneck']}_s"]
+            print(f"roofline_{r['arch']}_{r['shape']},{dom * 1e6:.0f},"
+                  f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f}")
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        kernel_bench.run()
+    if want("security"):
+        from benchmarks import security_eval
+        import json
+        out = security_eval.run(n=1024 if args.quick else 2048)
+        with open("experiments/bench/security.json", "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

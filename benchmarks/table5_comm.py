@@ -1,0 +1,61 @@
+"""Table V: communication volume vs accuracy per method; plus Figs 4-5
+(comm time under bandwidth / latency) computed analytically from the wire
+volume and round counts."""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.data import make_dataset
+
+from benchmarks.harness import (build_method, hetero_arches, train_eval,
+                                vertical_partition)
+
+METHODS = ["pyvertical", "c_vfl", "agg_vfl", "easter"]
+BANDWIDTHS_MBPS = [10, 50, 100, 500]
+LATENCIES_MS = [("low", 15), ("mid", 40), ("high", 75)]
+MSGS_PER_ROUND = 4   # up-embed, down-embed, up-pred, down-loss
+
+
+def run(datasets=("fmnist_like", "cinic_like", "criteo_like"),
+        steps: int = 120, save=None):
+    rows = []
+    for dname in datasets:
+        ds = make_dataset(dname, n_train=2048, n_test=512)
+        C = 4
+        nf = [v.shape[-1]
+              for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+        arches = hetero_arches(C, ds.n_classes)
+        for m in METHODS:
+            method = build_method(m, arches, nf, ds.n_classes)
+            r = train_eval(method, ds, C, steps=steps)
+            vol_mb = r["bytes_per_round"] * steps / 2 ** 20
+            comm = {}
+            for bw in BANDWIDTHS_MBPS:
+                t_bw = vol_mb * 8 / bw
+                comm[f"bw{bw}"] = round(t_bw, 2)
+            for lname, lat in LATENCIES_MS:
+                t = (vol_mb * 8 / 50
+                     + steps * MSGS_PER_ROUND * lat / 1000.0)
+                comm[f"lat_{lname}"] = round(t, 2)
+            rows.append({"dataset": dname, "method": m,
+                         "acc_avg": round(r["acc_avg"], 4),
+                         "volume_mb": round(vol_mb, 2), **comm})
+            print(f"table5_{dname}_{m},{r['us_per_step']:.0f},"
+                  f"vol_mb={vol_mb:.1f};acc={r['acc_avg']:.4f}")
+    if save:
+        with open(save, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--save", default=None)
+    a = ap.parse_args()
+    run(steps=a.steps, save=a.save)
+
+
+if __name__ == "__main__":
+    main()

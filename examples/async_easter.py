@@ -1,0 +1,93 @@
+"""Asynchronous EASTER (the paper's §VI Future Direction): passive parties
+upload embeddings every `period` rounds; the active party aggregates the
+freshest available (stale) embeddings in between. Heterogeneous-DEVICE
+simulation: slow parties refresh less often (paper Table VII setting).
+
+    PYTHONPATH=src python examples/async_easter.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EasterConfig
+from repro.core.party_models import PartyArch
+from repro.core.protocol import EasterClassifier
+from repro.data import make_dataset, vertical_partition
+from repro.data.pipeline import batch_iterator
+
+
+def train(sys, ds, C, periods, steps=120, lr=2e-3, batch=128):
+    """periods[k]: party k refreshes its embedding every periods[k] rounds
+    (1 = synchronous). Stale embeddings come from the last refresh round's
+    PARAMS applied to the CURRENT batch (device-speed, not data, staleness)."""
+    import jax
+
+    params = sys.init_params(jax.random.PRNGKey(0))
+    init_opt, _ = sys.make_train_step("adam", lr)
+    opt_state = init_opt(params)
+    from repro.optim import make_optimizer
+    opt = make_optimizer("adam", lr)
+    stale_params = [params[k] for k in range(C)]
+    it = batch_iterator(ds.x_train, ds.y_train, batch, seed=0)
+
+    from repro.core.party_models import embed_fn
+    from repro.core.losses import softmax_xent
+
+    @jax.jit
+    def step(params, stale_params, opt_state, xs, y):
+        def loss_fn(p):
+            Es = [embed_fn(sp if fresh is None else fresh, sys.arches[k],
+                           xs[k])
+                  for k, (sp, fresh) in enumerate(stale_params)]
+            E = jnp.mean(jnp.stack(Es), axis=0)
+            # parties with fresh embeddings get gradient flow (fresh = own
+            # current params); stale parties' contributions are constants
+            per = []
+            from repro.core.party_models import decide_fn
+            for k in range(C):
+                Ek = (jax.lax.stop_gradient(E)
+                      - jax.lax.stop_gradient(Es[k]) / C + Es[k] / C)
+                per.append(softmax_xent(decide_fn(p[k], sys.arches[k], Ek),
+                                        y))
+            return jnp.sum(jnp.stack(per)), jnp.stack(per)
+        (tot, per), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_s = [], []
+        for k in range(C):
+            pk, sk = opt.update(grads[k], opt_state[k], params[k])
+            new_p.append(pk)
+            new_s.append(sk)
+        return new_p, new_s, tot
+
+    for i in range(steps):
+        xb, yb = next(it)
+        xs = [jnp.asarray(v) for v in vertical_partition(xb, C, ds.image_hw)]
+        paired = []
+        for k in range(C):
+            fresh = params[k] if i % periods[k] == 0 else None
+            if fresh is not None:
+                stale_params[k] = params[k]
+            paired.append((stale_params[k], fresh))
+        params, opt_state, tot = step(params, paired, opt_state, xs,
+                                      jnp.asarray(yb))
+    xs_te = [jnp.asarray(v)
+             for v in vertical_partition(ds.x_test, C, ds.image_hw)]
+    return np.asarray(sys.accuracy(params, xs_te, jnp.asarray(ds.y_test)))
+
+
+def main():
+    ds = make_dataset("mnist_like", n_train=2048, n_test=512)
+    C = 4
+    nf = [v.shape[-1]
+          for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    arches = [PartyArch("mlp", (128, 64), (64,), 64, ds.n_classes)
+              for _ in range(C)]
+    sys = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                           arches, nf)
+    for periods in ([1, 1, 1, 1], [1, 2, 2, 2], [1, 4, 4, 4], [1, 8, 8, 8]):
+        acc = train(sys, ds, C, periods)
+        print(f"staleness periods {periods}: per-party acc "
+              f"{np.round(acc, 3)} (avg {acc.mean():.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: 2-passive-party EASTER on a synthetic vertical split.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EasterConfig
+from repro.core.party_models import PartyArch
+from repro.core.protocol import EasterClassifier
+from repro.data import make_dataset, vertical_partition
+from repro.data.pipeline import batch_iterator
+
+
+def main():
+    ds = make_dataset("mnist_like", n_train=2048, n_test=512)
+    C = 3  # 1 active + 2 passive
+    nf = [v.shape[-1]
+          for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    # heterogeneous local models: every party picks its own architecture
+    arches = [PartyArch("mlp", (256, 128), (128,), 64, ds.n_classes),
+              PartyArch("mlp", (128,), (64,), 64, ds.n_classes),
+              PartyArch("mlp", (512, 256), (256,), 64, ds.n_classes)]
+    sys = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                           arches, nf)
+    params = sys.init_params(jax.random.PRNGKey(0))
+    init_opt, step = sys.make_train_step("adam", 1e-3)
+    opt_state = init_opt(params)
+
+    it = batch_iterator(ds.x_train, ds.y_train, 128)
+    for i in range(120):
+        xb, yb = next(it)
+        xs = [jnp.asarray(v)
+              for v in vertical_partition(xb, C, ds.image_hw)]
+        masks = sys.masks(128, i)          # fresh pairwise blinding factors
+        params, opt_state, total, per = step(params, opt_state, xs,
+                                             jnp.asarray(yb), masks)
+        if i % 30 == 0:
+            print(f"round {i:4d}  total loss {float(total):.4f}  "
+                  f"per-party {np.round(np.asarray(per), 3)}")
+    xs_te = [jnp.asarray(v)
+             for v in vertical_partition(ds.x_test, C, ds.image_hw)]
+    acc = np.asarray(sys.accuracy(params, xs_te, jnp.asarray(ds.y_test)))
+    print(f"per-party test accuracy: {np.round(acc, 4)}  "
+          f"(every theta_k is an independently deployable model)")
+
+
+if __name__ == "__main__":
+    main()

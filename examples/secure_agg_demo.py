@@ -1,0 +1,52 @@
+"""Secure-aggregation walkthrough: the full DH key ceremony + blinding of
+paper §IV-B/C, showing (1) what the active party actually receives,
+(2) exact cancellation, (3) the int32 ring mode.
+
+    PYTHONPATH=src python examples/secure_agg_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, blinding
+
+
+def main():
+    K = 3
+    print("== key ceremony ==")
+    keys = [blinding.keygen(_test_seed=k) for k in range(K)]
+    for k, kp in enumerate(keys):
+        print(f"passive party {k}: PK = {hex(kp.pk)[:24]}... "
+              f"(2048-bit MODP group 14)")
+    seeds = blinding.pairwise_seeds(keys)
+    ck01 = blinding.shared_key(keys[0].sk, keys[1].pk)
+    ck10 = blinding.shared_key(keys[1].sk, keys[0].pk)
+    print(f"CK_01 == CK_10: {ck01 == ck10}  (Eq. 4 symmetry)")
+
+    print("\n== blinding (Eq. 5/6) ==")
+    E = jax.random.normal(jax.random.PRNGKey(0), (K + 1, 4, 8))
+    masks = blinding.all_party_masks(K, seeds, (4, 8), round_idx=0)
+    blinded = E[1:] + masks
+    print("raw E_1[0,:4]      :", np.round(np.asarray(E[1][0, :4]), 3))
+    print("[E_1][0,:4] on wire:", np.round(np.asarray(blinded[0][0, :4]), 3))
+    print("sum of masks (should ~0):",
+          float(jnp.abs(jnp.sum(masks, 0)).max()))
+
+    print("\n== aggregation (Eq. 7) ==")
+    agg = aggregation.blind_and_aggregate(E, masks)
+    plain = jnp.mean(E, axis=0)
+    print("max |blinded-agg - plain-mean| =",
+          float(jnp.abs(agg - plain).max()))
+
+    print("\n== int32 ring mode (beyond-paper, exact for any K) ==")
+    masks_i = blinding.all_party_masks(K, seeds, (4, 8), 0, "int32")
+    agg_i = aggregation.aggregate_int32(E, masks_i)
+    print("ring-sum of masks == 0:",
+          bool((jnp.sum(masks_i, 0) == 0).all()))
+    print("max |ring-agg - plain-mean| =",
+          float(jnp.abs(agg_i - plain).max()),
+          f"(quantization bound {(K + 1) / (2 * blinding.FIXED_POINT_SCALE):.1e})")
+
+
+if __name__ == "__main__":
+    main()

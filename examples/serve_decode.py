@@ -1,0 +1,23 @@
+"""Batched-request EASTER serving example: prefill a batch of prompts then
+stream tokens, one aggregated-embedding round per step.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-2.7b")
+    a = ap.parse_args()
+    # thin alias of the serving launcher with example-friendly defaults
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", a.arch,
+         "--smoke", "--batch", "4", "--prompt-len", "24", "--gen", "16"],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Flat-path .npz checkpointing for arbitrary pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[key + "@bf16"] = arr.astype(np.float32)
+        else:
+            out[key] = arr
+    return out
+
+
+def save(path: str, tree: Any, step: int | None = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def restore(path: str, like: Any):
+    """Restore into the structure (and dtypes) of ``like``."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    step = int(flat.pop("__step__")) if "__step__" in flat else None
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in leaves_like:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        if key in flat:
+            arr = flat[key]
+        elif key + "@bf16" in flat:
+            arr = flat[key + "@bf16"].astype(jnp.bfloat16)
+        else:
+            raise KeyError(f"checkpoint missing {key}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return (tree, step) if step is not None else (tree, None)

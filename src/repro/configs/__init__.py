@@ -1,0 +1,34 @@
+"""Architecture config registry.
+
+``ARCH_MODULES`` lists the module-per-architecture files; importing them
+registers each config under its public ``--arch`` id.
+"""
+
+ARCH_MODULES = [
+    "qwen2_5_3b",
+    "command_r_plus_104b",
+    "qwen3_moe_235b_a22b",
+    "gemma3_4b",
+    "qwen2_1_5b",
+    "whisper_small",
+    "mamba2_2_7b",
+    "recurrentgemma_9b",
+    "qwen2_vl_7b",
+    "qwen2_moe_a2_7b",
+    "easter_paper",
+]
+
+from repro.configs.base import (  # noqa: F401,E402
+    EasterConfig,
+    InputShape,
+    INPUT_SHAPES,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    HybridConfig,
+    TrainConfig,
+    get_config,
+    list_archs,
+    register,
+    smoke_variant,
+)

@@ -1,0 +1,30 @@
+"""whisper-small [audio] — enc-dec, conv frontend stubbed. [arXiv:2212.04356]
+
+Per the brief's carve-out, the mel-spectrogram + conv feature extractor is a
+STUB: ``input_specs()`` supplies precomputed frame embeddings (B, 1500, d).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-small")
+def whisper_small() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        family="encdec",
+        source="[arXiv:2212.04356]",
+        n_layers=12,            # decoder layers
+        n_encoder_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        vocab_size=51865,
+        qkv_bias=True,
+        act="gelu",
+        norm="layer",
+        n_audio_frames=1500,
+        rope_theta=0.0,         # whisper uses learned positions; we use
+                                # sinusoidal-fixed (stub-equivalent shapes)
+        remat="full",
+    )

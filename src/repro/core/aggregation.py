@@ -1,0 +1,63 @@
+"""Secure embedding aggregation (paper §IV-C, Eq. 7).
+
+The active party receives blinded embeddings [E_k] = E_k + r_k from the K
+passive parties and averages them with its own E_a:
+
+    E = (E_a + sum_k [E_k]) / C,   sum_k r_k == 0  =>  E == plain mean.
+
+Forms provided:
+  * ``aggregate``            — stacked-party jnp form (C leading axis); this
+    is what the SPMD train/serve steps lower (GSPMD turns the reduction into
+    the party all-reduce when party weights/activations are sharded).
+  * ``aggregate_int32``      — ring Z_2^32 fixed-point variant (beyond-paper).
+  * the fused Pallas kernel lives in ``repro.kernels.blind_agg`` (mask-add +
+    party-mean in one VMEM pass); ``use_kernel=True`` routes through it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import blinding
+
+
+def blind(E_passive: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
+    """[E_k] = E_k + r_k. E_passive/masks: (K, ...)."""
+    return E_passive + masks.astype(E_passive.dtype)
+
+
+def aggregate(E_active: jnp.ndarray, E_passive_blinded: jnp.ndarray,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Global embedding (Eq. 7). E_active (...,), E_passive_blinded (K, ...)."""
+    C = 1 + E_passive_blinded.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.blind_agg(E_active, E_passive_blinded,
+                                    jnp.zeros_like(E_passive_blinded))
+    return (E_active + jnp.sum(E_passive_blinded, axis=0)) / C
+
+
+def blind_and_aggregate(E_all: jnp.ndarray, masks: Optional[jnp.ndarray],
+                        use_kernel: bool = False) -> jnp.ndarray:
+    """E_all (C, ...): party 0 = active. masks (K, ...) for parties 1..K."""
+    if masks is None:
+        return jnp.mean(E_all, axis=0)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.blind_agg(E_all[0], E_all[1:], masks)
+    blinded = blind(E_all[1:], masks)
+    return aggregate(E_all[0], blinded)
+
+
+def aggregate_int32(E_all: jnp.ndarray, masks_i32: jnp.ndarray) -> jnp.ndarray:
+    """Ring-exact fixed-point secure aggregation (beyond-paper mode).
+
+    E_all (C, ...) float; masks_i32 (K, ...) int32 with ring-sum zero.
+    Returns float mean; quantization error <= C / (2*FIXED_POINT_SCALE).
+    """
+    C = E_all.shape[0]
+    q = blinding.quantize(E_all)                    # (C, ...)
+    q = q.at[1:].add(masks_i32)                     # wrap-around add
+    s = jnp.sum(q, axis=0)                          # masks cancel in Z_2^32
+    return s.astype(jnp.float32) / (blinding.FIXED_POINT_SCALE) / C

@@ -1,0 +1,174 @@
+"""Baseline VFL methods the paper compares against (§V-A3).
+
+  * Local       — models trained on the active party's feature slice only.
+  * SplitVFL    — Pyvertical [27]: per-party bottom nets, concatenated into a
+                  trainable top model at the active party.
+  * C_VFL       — [10]: SplitVFL + top-k sparsification of the uploaded
+                  activations (communication compression), straight-through
+                  gradients.
+  * AggVFL      — [28]: every party holds a full local model on its own
+                  features; the active party averages the *predictions*
+                  (non-trainable aggregate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.party_models import PartyArch, decide_fn, embed_fn, init_party
+from repro.models.layers import init_linear, linear
+from repro.optim import make_optimizer
+
+
+def _topk_sparsify(x: jnp.ndarray, keep_frac: float) -> jnp.ndarray:
+    """Keep top-|keep_frac| magnitudes per row; straight-through backward."""
+    k = max(1, int(x.shape[-1] * keep_frac))
+    thresh = jax.lax.top_k(jnp.abs(x), k)[0][..., -1:]       # kth largest |x|
+    mask = jnp.abs(x) >= thresh
+    sparse = jnp.where(mask, x, 0.0)
+    return x + jax.lax.stop_gradient(sparse - x)   # STE
+
+
+@dataclass
+class SplitVFL:
+    """Pyvertical-style SplitVFL; ``compress_frac`` > 0 makes it C_VFL."""
+    arches: List[PartyArch]
+    n_features: List[int]
+    n_classes: int = 10
+    top_hidden: int = 128
+    compress_frac: float = 0.0
+    loss: str = "ce"
+
+    def __post_init__(self):
+        self.C = len(self.arches)
+
+    def init_params(self, key):
+        ks = jax.random.split(key, self.C + 2)
+        bottoms = [init_party(ks[k], self.arches[k], self.n_features[k])
+                   for k in range(self.C)]
+        d_cat = sum(a.d_embed for a in self.arches)
+        top = {"l1": init_linear(ks[-2], d_cat, self.top_hidden, True,
+                                 jnp.float32),
+               "l2": init_linear(ks[-1], self.top_hidden, self.n_classes,
+                                 True, jnp.float32)}
+        return {"bottoms": bottoms, "top": top}
+
+    def logits(self, params, xs):
+        hs = []
+        for k in range(self.C):
+            h = embed_fn(params["bottoms"][k], self.arches[k], xs[k])
+            if self.compress_frac > 0:
+                h = _topk_sparsify(h, self.compress_frac)
+            hs.append(h)
+        h = jnp.concatenate(hs, axis=-1)
+        h = jax.nn.relu(linear(params["top"]["l1"], h))
+        return linear(params["top"]["l2"], h)
+
+    def loss_fn(self, params, xs, y, masks=None):
+        l = losses.LOSSES[self.loss](self.logits(params, xs), y)
+        return l, jnp.broadcast_to(l, (self.C,))
+
+    def accuracy(self, params, xs, y):
+        acc = jnp.mean(jnp.argmax(self.logits(params, xs), -1) == y)
+        return jnp.broadcast_to(acc, (self.C,))
+
+    def bytes_per_round(self, batch: int) -> int:
+        """Uplink activations + downlink grads per round (fp32)."""
+        d_cat = sum(a.d_embed for a in self.arches[1:])
+        per = d_cat * batch * 4
+        if self.compress_frac > 0:
+            per = int(per * self.compress_frac * 2)  # values + indices
+        return 2 * per                               # up + down
+
+
+@dataclass
+class AggVFL:
+    """Prediction-averaging aggVFL (Agg_VFL [28])."""
+    arches: List[PartyArch]
+    n_features: List[int]
+    loss: str = "ce"
+
+    def __post_init__(self):
+        self.C = len(self.arches)
+
+    def init_params(self, key):
+        ks = jax.random.split(key, self.C)
+        return [init_party(ks[k], self.arches[k], self.n_features[k])
+                for k in range(self.C)]
+
+    def party_logits(self, params, xs):
+        return [decide_fn(params[k], self.arches[k],
+                          embed_fn(params[k], self.arches[k], xs[k]))
+                for k in range(self.C)]
+
+    def loss_fn(self, params, xs, y, masks=None):
+        R = self.party_logits(params, xs)
+        agg = jnp.mean(jnp.stack(R), axis=0)        # non-trainable aggregate
+        l = losses.LOSSES[self.loss](agg, y)
+        return l, jnp.broadcast_to(l, (self.C,))
+
+    def accuracy(self, params, xs, y):
+        R = self.party_logits(params, xs)
+        return jnp.stack([jnp.mean(jnp.argmax(r, -1) == y) for r in R])
+
+    def aggregate_accuracy(self, params, xs, y):
+        """Accuracy of the (non-trainable) averaged prediction."""
+        agg = jnp.mean(jnp.stack(self.party_logits(params, xs)), axis=0)
+        return jnp.mean(jnp.argmax(agg, -1) == y)
+
+    def bytes_per_round(self, batch: int) -> int:
+        n_cls = self.arches[0].n_classes
+        return 2 * (self.C - 1) * batch * n_cls * 4
+
+
+@dataclass
+class LocalOnly:
+    """Models trained on the active party's features alone (paper 'Local')."""
+    arches: List[PartyArch]
+    n_features: List[int]
+    loss: str = "ce"
+
+    def __post_init__(self):
+        self.C = len(self.arches)
+
+    def init_params(self, key):
+        ks = jax.random.split(key, self.C)
+        # every theta_k trains on party-0's slice (paper §V-B1)
+        return [init_party(ks[k], self.arches[k], self.n_features[0])
+                for k in range(self.C)]
+
+    def _logits(self, params, xs):
+        x0 = xs[0]
+        return [decide_fn(params[k], self.arches[k],
+                          embed_fn(params[k], self.arches[k], x0))
+                for k in range(self.C)]
+
+    def loss_fn(self, params, xs, y, masks=None):
+        R = self._logits(params, xs)
+        per = jnp.stack([losses.LOSSES[self.loss](r, y) for r in R])
+        return jnp.sum(per), per
+
+    def accuracy(self, params, xs, y):
+        R = self._logits(params, xs)
+        return jnp.stack([jnp.mean(jnp.argmax(r, -1) == y) for r in R])
+
+    def bytes_per_round(self, batch: int) -> int:
+        return 0
+
+
+def make_train_step(method, optimizer_name: str, lr: float, **opt_kw):
+    """Generic jit'd trainer for any method exposing loss_fn."""
+    opt = make_optimizer(optimizer_name, lr, **opt_kw)
+
+    @jax.jit
+    def step(params, opt_state, xs, y, masks):
+        (total, per), grads = jax.value_and_grad(
+            method.loss_fn, has_aux=True)(params, xs, y, masks)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, total, per
+
+    return opt.init, step

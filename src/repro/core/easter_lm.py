@@ -1,0 +1,229 @@
+"""EASTER at LLM scale — the production instantiation the dry-run lowers.
+
+Parties:
+  * party 0 (ACTIVE)  — the full assigned architecture as its backbone;
+  * parties 1..K (PASSIVE) — heterogeneous reduced-depth proxies of the same
+    family (depth x ``passive_depth_frac``), per the paper's heterogeneous
+    setting (different local model sizes; cross-*family* heterogeneity is
+    exercised at paper scale in core/protocol.py).
+
+Per-party local model = backbone (hidden states) -> linear proj into the
+shared embedding space R^{d_embed} (the paper's embedding layer h), then an
+MLP decision stack + LM head (the paper's decision layers p; the paper's PL
+is an MLP, so the LM-scale decision net is a per-position MLP stack).
+
+The EASTER round is fused into one SPMD step:
+  local embeds -> in-graph PRF blinding (passive) -> mean-aggregate ->
+  per-party decision -> per-party loss (labels live with the active party) ->
+  paper-faithful per-party gradients via the stop-gradient surrogate
+  (see core/protocol.py docstring for the equivalence proof obligations).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import EasterConfig, ModelConfig
+from repro.core import aggregation, blinding
+from repro.core.losses import chunked_lm_head_xent, lm_xent
+from repro.models import transformer
+from repro.models.layers import (
+    _dense_init, apply_norm, init_linear, init_mlp, init_norm, linear, mlp,
+)
+
+
+def passive_cfg(cfg: ModelConfig, easter: EasterConfig, k: int) -> ModelConfig:
+    """Heterogeneous passive-party proxy: reduced depth, same family.
+
+    With ``easter.moe_dense_passive`` an MoE active gets DENSE passive
+    proxies whose FFN width matches the MoE's *active* FLOPs
+    (top_k x d_expert_ff) — same compute, zero expert all-to-all (§Perf H1).
+    """
+    frac = easter.passive_depth_frac
+    n = max(2, int(round(cfg.n_layers * frac)))
+    if cfg.family == "hybrid":
+        n = max(len(cfg.hybrid.pattern), n - n % len(cfg.hybrid.pattern))
+    kw = dict(n_layers=n, tie_embeddings=True,
+              name=f"{cfg.name}-passive{k}")
+    if cfg.family == "moe" and easter.moe_dense_passive:
+        from repro.configs.base import MoEConfig
+        kw.update(family="dense",
+                  d_ff=cfg.moe.d_expert_ff
+                  * (cfg.moe.top_k + cfg.moe.n_shared_experts),
+                  moe=MoEConfig())
+    return dataclasses.replace(cfg, **kw)
+
+
+@dataclass(frozen=True)
+class EasterLM:
+    cfg: ModelConfig                 # active party's architecture
+    easter: EasterConfig
+    grad_mode: str = "easter"        # easter (paper) | joint (beyond-paper)
+
+    @property
+    def party_cfgs(self) -> List[ModelConfig]:
+        active = dataclasses.replace(self.cfg, tie_embeddings=True)
+        return [active] + [passive_cfg(self.cfg, self.easter, k)
+                           for k in range(1, self.easter.num_passive + 1)]
+
+    @property
+    def C(self) -> int:
+        return self.easter.num_passive + 1
+
+    # -- blinding setup (host-side DH ceremony) -----------------------------
+    def mask_seeds(self):
+        if self.easter.num_passive < 2 or not self.easter.enabled:
+            return None
+        _, seeds = blinding.setup_passive_parties(
+            self.easter.num_passive, deterministic_seed=1729)
+        return seeds
+
+    # -- params --------------------------------------------------------------
+    def init_party(self, key, pcfg: ModelConfig) -> Dict[str, Any]:
+        kb, kp, kd, kh = jax.random.split(key, 4)
+        d_e = self.easter.d_embed
+        dtype = jnp.dtype(pcfg.dtype)
+        decision = []
+        for i in range(self.easter.decision_layers):
+            ki = jax.random.fold_in(kd, i)
+            decision.append({
+                "ln": init_norm(pcfg.norm, d_e, dtype),
+                "mlp": init_mlp(ki, d_e, 4 * d_e, pcfg.act, dtype)})
+        return {
+            "backbone": transformer.init_lm(kb, pcfg),
+            "proj": init_linear(kp, pcfg.d_model, d_e, False, dtype),
+            "decision": decision,
+            "final_norm": init_norm(pcfg.norm, d_e, dtype),
+            "head": init_linear(kh, d_e, pcfg.vocab_size, False, dtype),
+        }
+
+    def init_params(self, key) -> Dict[str, Any]:
+        ks = jax.random.split(key, self.C)
+        return {"parties": [self.init_party(ks[k], pcfg)
+                            for k, pcfg in enumerate(self.party_cfgs)]}
+
+    # -- protocol pieces -----------------------------------------------------
+    def local_embed(self, pparams, pcfg: ModelConfig, tokens, *, caches=None,
+                    pos_offset=0, window_override=-1, **fe):
+        h, new_caches, aux = transformer.apply_lm(
+            pparams["backbone"], tokens, pcfg, caches=caches,
+            pos_offset=pos_offset, window_override=window_override,
+            return_hidden=True, **fe)
+        E = linear(pparams["proj"], h)                 # (B, S, d_embed)
+        return E, new_caches, aux
+
+    def masks_for(self, shape, round_idx, seeds):
+        if seeds is None:
+            return None
+        r = round_idx if self.easter.fresh_masks else 0
+        return blinding.all_party_masks(
+            self.easter.num_passive, seeds, shape, r, self.easter.mask_mode)
+
+    def decide_hidden(self, pparams, pcfg: ModelConfig, E):
+        x = E
+        for blk in pparams["decision"]:
+            x = x + mlp(blk["mlp"], apply_norm(blk["ln"], x, pcfg.rms_eps),
+                        pcfg.act)
+        return apply_norm(pparams["final_norm"], x, pcfg.rms_eps)
+
+    def decide(self, pparams, pcfg: ModelConfig, E):
+        x = self.decide_hidden(pparams, pcfg, E)
+        return linear(pparams["head"], x)              # (B, S, vocab)
+
+    def _per_party_E(self, E, E_all, k):
+        if self.grad_mode == "easter":
+            return (jax.lax.stop_gradient(E)
+                    - jax.lax.stop_gradient(E_all[k]) / self.C
+                    + E_all[k] / self.C)
+        return E
+
+    # -- training forward/loss ----------------------------------------------
+    def loss_fn(self, params, batch, round_idx, seeds):
+        tokens, labels = batch["tokens"], batch["labels"]
+        fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
+        Es, auxes = [], []
+        for k, pcfg in enumerate(self.party_cfgs):
+            E_k, _, aux_k = self.local_embed(params["parties"][k], pcfg,
+                                             tokens, **fe)
+            Es.append(E_k)
+            auxes.append(aux_k)
+        from repro import sharding as shard_hints
+        E_all = jnp.stack(Es)                           # (C, B, S, d_e)
+        E_all = shard_hints.constrain(E_all, (None, "batch", None, None))
+        masks = self.masks_for(E_all.shape[1:], round_idx, seeds)
+        if masks is not None:
+            masks = shard_hints.constrain(masks, (None, "batch", None, None))
+        if masks is not None and self.easter.mask_mode == "int32":
+            E = aggregation.aggregate_int32(E_all, masks)
+        else:
+            E = aggregation.blind_and_aggregate(E_all, masks)
+        E = shard_hints.constrain(E, ("batch", None, None))
+        per = []
+        for k, pcfg in enumerate(self.party_cfgs):
+            h_k = self.decide_hidden(params["parties"][k], pcfg,
+                                     self._per_party_E(E.astype(E_all.dtype),
+                                                       E_all, k))
+            # fused head + CE: never materializes (B, S, V) logits
+            per.append(chunked_lm_head_xent(
+                h_k, params["parties"][k]["head"]["w"], labels))
+        total = jnp.sum(jnp.stack(per)) + jnp.sum(jnp.stack(auxes))
+        return total, jnp.stack(per)
+
+    # -- serving -------------------------------------------------------------
+    def init_caches(self, batch: int, cache_len: int,
+                    window_override: int = -1):
+        return [transformer.init_cache(pcfg, batch, cache_len,
+                                       window_override)
+                for pcfg in self.party_cfgs]
+
+    def serve_step(self, params, tokens, caches, pos, seeds,
+                   window_override: int = -1, fe_list=None):
+        """One decode step: tokens (B,1). Returns (active logits, caches).
+
+        fe_list: per-party frontend extras (e.g. whisper's precomputed
+        cross-attention ``enc_kv``) — party models are heterogeneous, so
+        these differ per party.
+        """
+        Es, new_caches = [], []
+        for k, pcfg in enumerate(self.party_cfgs):
+            fe = fe_list[k] if fe_list else {}
+            E_k, nc, _ = self.local_embed(
+                params["parties"][k], pcfg, tokens, caches=caches[k],
+                pos_offset=pos, window_override=window_override, **fe)
+            Es.append(E_k)
+            new_caches.append(nc)
+        E_all = jnp.stack(Es)
+        masks = self.masks_for(E_all.shape[1:], pos, seeds)
+        E = aggregation.blind_and_aggregate(
+            E_all, None if masks is None or self.easter.mask_mode == "int32"
+            else masks)
+        logits = self.decide(params["parties"][0], self.party_cfgs[0],
+                             E.astype(E_all.dtype))
+        return logits, new_caches
+
+    def prefill(self, params, tokens, caches, window_override: int = -1,
+                fe_list=None):
+        """Cache-building forward over the prompt; returns (E, caches)."""
+        Es, new_caches = [], []
+        for k, pcfg in enumerate(self.party_cfgs):
+            fe = fe_list[k] if fe_list else {}
+            E_k, nc, _ = self.local_embed(
+                params["parties"][k], pcfg, tokens, caches=caches[k],
+                window_override=window_override, **fe)
+            Es.append(E_k)
+            new_caches.append(nc)
+        E = jnp.mean(jnp.stack(Es), axis=0)
+        return E, new_caches
+
+    def encoder_kv(self, params, audio_embed):
+        """Whisper path: per-party precomputed cross-attention K/V."""
+        out = []
+        for k, pcfg in enumerate(self.party_cfgs):
+            bp = params["parties"][k]["backbone"]
+            enc_out = transformer.encode(bp, audio_embed, pcfg)
+            out.append({"enc_kv": transformer._encoder_kv(bp, enc_out, pcfg)})
+        return out

@@ -1,0 +1,61 @@
+"""Loss functions (paper §IV-D: active party picks LF per task)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Multi-class cross-entropy. logits (..., n_cls), labels int (...)."""
+    logz = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def binary_xent(probs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. (8) (log base 2, as printed). probs/labels (...,)."""
+    p = jnp.clip(probs.astype(jnp.float32), 1e-7, 1 - 1e-7)
+    y = labels.astype(jnp.float32)
+    return -jnp.mean(y * jnp.log2(p) + (1 - y) * jnp.log2(1 - p))
+
+
+def mse(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    d = pred.astype(jnp.float32) - target.astype(jnp.float32)
+    return jnp.mean(d * d)
+
+
+def lm_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Next-token LM loss. logits (B,S,V), labels (B,S)."""
+    return softmax_xent(logits, labels)
+
+
+def chunked_lm_head_xent(h: jnp.ndarray, head_w: jnp.ndarray,
+                         labels: jnp.ndarray, chunk: int = 512
+                         ) -> jnp.ndarray:
+    """Fused LM-head + cross-entropy, scanned over sequence chunks.
+
+    Never materializes the full (B, S, V) logits — per chunk, logits are
+    computed, reduced to (B, chunk) loss terms and discarded; the chunk body
+    is rematerialized in the backward pass (jax.checkpoint), so the live
+    working set is O(B * chunk * V / shards) instead of O(B * S * V).
+    """
+    B, S, d = h.shape
+    if S % chunk or S <= chunk:
+        return softmax_xent(h @ head_w, labels)
+    nc = S // chunk
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hc, yc = xs                            # (nc axis sliced)
+        logits = (hc @ head_w).astype(jnp.float32)          # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - ll), None
+
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    return total / (B * S)
+
+
+LOSSES = {"ce": softmax_xent, "bce": binary_xent, "mse": mse, "lm": lm_xent}

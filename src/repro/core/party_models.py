@@ -1,0 +1,133 @@
+"""Paper-scale heterogeneous party models (MLP / CNN / LeNet-style).
+
+These mirror the paper's §V-A model zoo at CPU-runnable scale. Every party
+model is split into the paper's two halves:
+
+  * ``embed``  — the embedding network h(theta_k, .):  features -> R^{d_embed}
+  * ``decide`` — the decision network  p(theta_k, .):  R^{d_embed} -> logits
+
+Heterogeneity = different family/width/depth per party (paper Table II).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, init_linear, linear
+
+
+@dataclass(frozen=True)
+class PartyArch:
+    """One heterogeneous local model."""
+    kind: str = "mlp"                   # mlp | cnn | lenet
+    hidden: Tuple[int, ...] = (256, 128)  # EL widths (mlp) / channels (cnn)
+    decision_hidden: Tuple[int, ...] = (128,)  # PL widths
+    d_embed: int = 128
+    n_classes: int = 10
+    image_hw: Tuple[int, int] = (0, 0)  # (H, W_slice) for conv kinds; 0 = flat
+
+
+# the paper's per-dataset zoos, reduced to CPU scale
+ZOO = {
+    "mlp_small": PartyArch("mlp", (128,), (64,)),
+    "mlp": PartyArch("mlp", (256, 128), (128,)),
+    "mlp_wide": PartyArch("mlp", (512, 256), (256,)),
+    "cnn": PartyArch("cnn", (16, 32), (128,)),
+    "lenet": PartyArch("lenet", (6, 16), (120, 84)),
+}
+
+
+def hetero_zoo(n_parties: int, d_embed: int, n_classes: int,
+               image_hw=(0, 0)) -> List[PartyArch]:
+    """Paper heterogeneous setting: each party picks a different model."""
+    names = ["mlp", "cnn", "mlp_wide", "lenet", "mlp_small"]
+    out = []
+    for i in range(n_parties):
+        a = ZOO[names[i % len(names)]]
+        out.append(PartyArch(a.kind, a.hidden, a.decision_hidden, d_embed,
+                             n_classes, image_hw))
+    return out
+
+
+def homo_zoo(n_parties: int, d_embed: int, n_classes: int,
+             image_hw=(0, 0), kind: str = "mlp") -> List[PartyArch]:
+    a = ZOO[kind]
+    return [PartyArch(a.kind, a.hidden, a.decision_hidden, d_embed,
+                      n_classes, image_hw) for _ in range(n_parties)]
+
+
+# ---------------------------------------------------------------------------
+# init / apply
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout),
+                             jnp.float32) / math.sqrt(fan)
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init_party(key, arch: PartyArch, n_features: int) -> dict:
+    """n_features: flat feature count of this party's vertical slice."""
+    keys = jax.random.split(key, 16)
+    p: dict = {"embed": {}, "decide": {}}
+    if arch.kind == "mlp":
+        dims = [n_features, *arch.hidden, arch.d_embed]
+        p["embed"]["layers"] = [
+            init_linear(keys[i], dims[i], dims[i + 1], True, jnp.float32)
+            for i in range(len(dims) - 1)]
+    else:  # cnn / lenet on an image strip (H, W_slice, C=1)
+        h, w = arch.image_hw
+        assert h * w == n_features, (arch.image_hw, n_features)
+        c1, c2 = arch.hidden[:2]
+        p["embed"]["conv1"] = _conv_init(keys[0], 3, 3, 1, c1)
+        p["embed"]["conv2"] = _conv_init(keys[1], 3, 3, c1, c2)
+        # two stride-2 SAME max-pools: dims shrink with ceil semantics
+        hh = -(-(-(-h // 2)) // 2)
+        ww = -(-(-(-w // 2)) // 2)
+        p["embed"]["proj"] = init_linear(keys[2], hh * ww * c2, arch.d_embed,
+                                         True, jnp.float32)
+    dims = [arch.d_embed, *arch.decision_hidden, arch.n_classes]
+    p["decide"]["layers"] = [
+        init_linear(keys[8 + i], dims[i], dims[i + 1], True, jnp.float32)
+        for i in range(len(dims) - 1)]
+    return p
+
+
+def embed_fn(p: dict, arch: PartyArch, x: jnp.ndarray) -> jnp.ndarray:
+    """h(theta_k, D_k): (B, n_features) -> (B, d_embed)."""
+    if arch.kind == "mlp":
+        h = x
+        for i, lp in enumerate(p["embed"]["layers"]):
+            h = linear(lp, h)
+            if i < len(p["embed"]["layers"]) - 1:
+                h = jax.nn.relu(h)
+        return h
+    hgt, wid = arch.image_hw
+    img = x.reshape(-1, hgt, wid, 1)
+    h = jax.nn.relu(_conv(img, p["embed"]["conv1"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "SAME")
+    h = jax.nn.relu(_conv(h, p["embed"]["conv2"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "SAME")
+    return linear(p["embed"]["proj"], h.reshape(h.shape[0], -1))
+
+
+def decide_fn(p: dict, arch: PartyArch, E: jnp.ndarray) -> jnp.ndarray:
+    """p(theta_k, E): (B, d_embed) -> (B, n_classes) logits."""
+    h = E
+    for i, lp in enumerate(p["decide"]["layers"]):
+        h = linear(lp, h)
+        if i < len(p["decide"]["layers"]) - 1:
+            h = jax.nn.relu(h)
+    return h

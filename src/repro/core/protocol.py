@@ -1,0 +1,205 @@
+"""EASTER training protocol (paper Alg. 1) — paper-scale instantiation.
+
+One round (C = K+1 parties, party 0 = active):
+  1. every party computes its local embedding E_k = h(theta_k, D_k);
+     passive parties blind: [E_k] = E_k + r_k                      (lines 2-5)
+  2. active aggregates the global embedding E = (1/C)(E_a + sum [E_k]) (l. 6)
+  3. every party predicts R_k = p(theta_k, E)                      (lines 7-10)
+  4. active computes L_k = LF(R_k, Y) and the loss signal for each
+     party (label assist)                                          (lines 11-12)
+  5. every party updates its own heterogeneous model with ITS OWN loss
+     gradient: theta_k <- theta_k - eta * d L_k / d theta_k        (lines 13-15)
+
+Gradient semantics (paper Alg. 1, line 14): party k updates with the gradient
+of *its own* loss L_k only. For the embedding net this flows through the
+global embedding's dependence on E_k alone — other parties' embeddings are
+constants from party k's point of view. We implement this exactly with a
+stop-gradient surrogate so that ONE ``jax.grad`` produces every party's
+paper-faithful gradient:
+
+    E_for_k = stop_grad(E) - stop_grad(E_k)/C + E_k/C      (value == E)
+
+``grad_mode="joint"`` (beyond-paper) instead lets every loss reach every
+embedding net (full cross-party gradient flow).
+
+``assisted_grads`` is the message-passing reference implementation of the
+paper's active-party-assisted backward pass (explicit vjp per party), used to
+*prove* the surrogate matches the protocol (tests/test_protocol_grads.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import EasterConfig
+from repro.core import aggregation, blinding, losses, party_models
+from repro.core.party_models import PartyArch, decide_fn, embed_fn, init_party
+from repro.optim import make_optimizer
+
+
+@dataclass
+class EasterClassifier:
+    """Paper-scale EASTER system over vertically-split features."""
+    easter: EasterConfig
+    arches: List[PartyArch]             # C entries; [0] = active party
+    n_features: List[int]               # per-party vertical feature split
+    loss: str = "ce"
+    grad_mode: str = "easter"           # easter (paper) | joint (beyond)
+    # beyond-paper ablation: C_VFL-style top-k sparsification of the
+    # UPLINK embeddings (values+indices wire format), straight-through
+    # gradients. 0 = off (paper). Composes with blinding: masks are
+    # applied to the sparsified embedding.
+    compress_frac: float = 0.0
+
+    def __post_init__(self):
+        assert len(self.arches) == len(self.n_features)
+        self.C = len(self.arches)
+        self.K = self.C - 1
+        if self.K > 1:
+            self.keys, self.seeds = blinding.setup_passive_parties(
+                self.K, deterministic_seed=7)
+        else:
+            self.keys, self.seeds = [], {}
+
+    # -- params ------------------------------------------------------------
+    def init_params(self, key) -> List[dict]:
+        ks = jax.random.split(key, self.C)
+        return [init_party(ks[k], self.arches[k], self.n_features[k])
+                for k in range(self.C)]
+
+    # -- protocol steps ----------------------------------------------------
+    def masks(self, batch: int, round_idx: int = 0):
+        if self.K < 2 or not self.easter.enabled:
+            return None
+        shape = (batch, self.easter.d_embed)
+        r = round_idx if self.easter.fresh_masks else 0
+        return blinding.all_party_masks(self.K, self.seeds, shape, r,
+                                        self.easter.mask_mode)
+
+    def local_embeds(self, params, xs) -> jnp.ndarray:
+        """(C, B, d_embed) local embeddings, party order."""
+        Es = [embed_fn(params[k], self.arches[k], xs[k])
+              for k in range(self.C)]
+        if self.compress_frac > 0:
+            from repro.core.baselines import _topk_sparsify
+            # passive parties compress their uplink (active stays local)
+            Es = [Es[0]] + [_topk_sparsify(e, self.compress_frac)
+                            for e in Es[1:]]
+        return jnp.stack(Es)
+
+    def global_embed(self, E_all: jnp.ndarray, masks) -> jnp.ndarray:
+        if masks is not None and self.easter.mask_mode == "int32":
+            return aggregation.aggregate_int32(E_all, masks)
+        return aggregation.blind_and_aggregate(E_all, masks)
+
+    def predictions(self, params, E: jnp.ndarray, E_all=None) -> List:
+        """R_k = p(theta_k, E_for_k) for every party (paper grad masking)."""
+        out = []
+        for k in range(self.C):
+            Ek = E
+            if self.grad_mode == "easter" and E_all is not None:
+                Ek = (jax.lax.stop_gradient(E)
+                      - jax.lax.stop_gradient(E_all[k]) / self.C
+                      + E_all[k] / self.C)
+            out.append(decide_fn(params[k], self.arches[k], Ek))
+        return out
+
+    def forward(self, params, xs, masks=None):
+        E_all = self.local_embeds(params, xs)
+        E = self.global_embed(E_all, masks)
+        R = self.predictions(params, E, E_all)
+        return E, R
+
+    def loss_fn(self, params, xs, y, masks=None):
+        """Total (sum over parties) + per-party losses."""
+        _, R = self.forward(params, xs, masks)
+        lf = losses.LOSSES[self.loss]
+        per = jnp.stack([lf(r, y) for r in R])
+        return jnp.sum(per), per
+
+    # -- assisted-gradient reference path (message passing) ----------------
+    def assisted_grads(self, params, xs, y, masks=None):
+        """Paper's explicit protocol: per-party vjp with active-party loss
+        assist. Returns (grads list, per-party losses)."""
+        lf = losses.LOSSES[self.loss]
+        # step 1: local embeddings, keeping per-party vjp closures
+        Es, vjp_embed = [], []
+        for k in range(self.C):
+            E_k, vjp_k = jax.vjp(
+                lambda pk, k=k: embed_fn(pk, self.arches[k], xs[k]),
+                params[k])
+            Es.append(E_k)
+            vjp_embed.append(vjp_k)
+        E_all = jnp.stack(Es)
+        # step 2: active party aggregates (masks cancel)
+        E = self.global_embed(E_all, masks)
+        E = jax.lax.stop_gradient(E)
+        grads, per_losses = [], []
+        for k in range(self.C):
+            # step 3: party k predicts from the global embedding
+            R_k, vjp_dec = jax.vjp(
+                lambda pk, e, k=k: decide_fn(pk, self.arches[k], e),
+                params[k], E)
+            # step 4: ACTIVE party computes the loss signal dL_k/dR_k
+            L_k, gR_k = jax.value_and_grad(lambda r: lf(r, y))(R_k)
+            # step 5: party k backprops its decision net; receives dL_k/dE
+            g_dec, gE = vjp_dec(gR_k)
+            # step 6: embedding-net grad via dE/dE_k = 1/C (mean aggregation)
+            (g_emb,) = vjp_embed[k](gE / self.C)
+            g_k = jax.tree.map(lambda a, b: a + b, g_dec, g_emb)
+            grads.append(g_k)
+            per_losses.append(L_k)
+        return grads, jnp.stack(per_losses)
+
+    # -- training ----------------------------------------------------------
+    def make_train_step(self, optimizer_name: str, lr: float, **opt_kw):
+        opt = make_optimizer(optimizer_name, lr, **opt_kw)
+
+        def init_opt(params):
+            return [opt.init(p) for p in params]
+
+        @jax.jit
+        def step(params, opt_state, xs, y, masks):
+            (total, per), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, xs, y, masks)
+            new_params, new_state = [], []
+            for k in range(self.C):
+                p, s = opt.update(grads[k], opt_state[k], params[k])
+                new_params.append(p)
+                new_state.append(s)
+            return new_params, new_state, total, per
+
+        return init_opt, step
+
+    def bytes_per_round(self, batch: int) -> int:
+        """Wire bytes per training round (paper Table V accounting):
+        blinded embeddings up + global embedding down + predictions up +
+        loss signal down (fp32)."""
+        d_e = self.easter.d_embed
+        n_cls = self.arches[0].n_classes
+        up_e = self.K * batch * d_e * 4
+        if self.compress_frac > 0:
+            up_e = int(up_e * self.compress_frac * 2)  # values + indices
+        down_e = self.K * batch * d_e * 4
+        up_r = self.K * batch * n_cls * 4
+        down_l = self.K * batch * n_cls * 4
+        return up_e + down_e + up_r + down_l
+
+    def accuracy(self, params, xs, y) -> jnp.ndarray:
+        """Per-party test accuracy (the paper's theta_1..theta_C columns)."""
+        _, R = self.forward(params, xs, masks=None)
+        return jnp.stack([jnp.mean((jnp.argmax(r, -1) == y)) for r in R])
+
+
+def split_features(x: jnp.ndarray, C: int) -> List[jnp.ndarray]:
+    """Vertical split: feature dim into C near-equal slices (paper §V-A)."""
+    F = x.shape[-1]
+    sizes = [F // C + (1 if i < F % C else 0) for i in range(C)]
+    out, off = [], 0
+    for s in sizes:
+        out.append(x[..., off:off + s])
+        off += s
+    return out

@@ -1,0 +1,223 @@
+"""Multi-process EASTER deployment: parties as separate OS processes.
+
+The SPMD path (core/easter_lm.py) fuses all parties into one program — the
+right thing on a TPU pod a single org operates. In an actual VFL deployment
+the parties are separate *trust domains*: this module runs each passive
+party in its own process, exchanging ONLY the protocol messages of Alg. 1
+over pipes (public keys, blinded embeddings, predictions, loss signals).
+The active party never receives raw embeddings or features.
+
+    from repro.core.wire import WireEaster
+    sys = WireEaster(arches, n_features, n_classes)
+    sys.start(); sys.train(batches); sys.stop()
+
+Used by examples/wire_protocol_demo.py and tests/test_wire.py.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def _passive_party_main(conn, party_idx: int, arch_bytes, n_features: int,
+                        lr: float, seed: int):
+    """Subprocess entry: owns its features' model + secret key. Speaks only
+    the wire protocol; raw data and parameters never leave this process."""
+    import pickle
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import blinding
+    from repro.core.party_models import decide_fn, embed_fn, init_party
+    from repro.optim import make_optimizer
+
+    arch = pickle.loads(arch_bytes)
+    params = init_party(jax.random.PRNGKey(seed), arch, n_features)
+    opt = make_optimizer("adam", lr)
+    opt_state = opt.init(params)
+    kp = blinding.keygen(_test_seed=seed * 977 + 13)
+    pair_seeds: Dict[int, int] = {}
+    my_idx = party_idx            # index among passive parties (0-based)
+    C = None
+    state = {"E": None, "vjp_e": None, "vjp_d": None, "x": None}
+
+    @jax.jit
+    def embed_and_vjp(p, x):
+        return jax.vjp(lambda pp: embed_fn(pp, arch, x), p)[0]
+
+    while True:
+        msg = conn.recv()
+        cmd = msg[0]
+        if cmd == "pubkey":
+            conn.send(("pubkey", kp.pk))
+        elif cmd == "setup":
+            _, other_pks, C = msg
+            for j, pk in other_pks.items():
+                ck = blinding.shared_key(kp.sk, pk)
+                pair_seeds[j] = blinding.prf_seed(ck)
+        elif cmd == "embed":
+            _, x_np, round_idx = msg
+            x = jnp.asarray(x_np)
+            E, vjp_e = jax.vjp(lambda pp: embed_fn(pp, arch, x), params)
+            mask = jnp.zeros_like(E)
+            for j, seed_j in pair_seeds.items():
+                m = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(seed_j % 2 ** 31),
+                                       round_idx), E.shape, jnp.float32)
+                mask = mask + (m if my_idx < j else -m)
+            state["E"], state["vjp_e"] = E, vjp_e
+            conn.send(("blinded_embed", np.asarray(E + mask)))
+        elif cmd == "predict":
+            _, E_glob_np = msg
+            Eg = jnp.asarray(E_glob_np)
+            R, vjp_d = jax.vjp(
+                lambda pp, e: decide_fn(pp, arch, e), params, Eg)
+            state["vjp_d"] = vjp_d
+            conn.send(("prediction", np.asarray(R)))
+        elif cmd == "grad":
+            # active party's loss assist: dL_k/dR_k
+            _, gR_np = msg
+            g_dec, gE = state["vjp_d"](jnp.asarray(gR_np))
+            (g_emb,) = state["vjp_e"](gE / C)
+            import jax as _j
+            grads = _j.tree.map(lambda a, b: a + b, g_dec, g_emb)
+            nonlocal_params, nonlocal_state = opt.update(grads, opt_state,
+                                                         params)
+            params, opt_state = nonlocal_params, nonlocal_state
+            conn.send(("updated", True))
+        elif cmd == "eval":
+            _, x_np, E_glob_np = msg
+            R = decide_fn(params, arch, jnp.asarray(E_glob_np))
+            conn.send(("logits", np.asarray(R)))
+        elif cmd == "stop":
+            conn.send(("bye", None))
+            return
+
+
+class WireEaster:
+    """Active-party orchestrator for the multi-process protocol."""
+
+    def __init__(self, arches, n_features: List[int], n_classes: int,
+                 lr: float = 1e-3, seed: int = 0):
+        import jax
+        import pickle
+
+        from repro.core.party_models import init_party
+        from repro.optim import make_optimizer
+
+        self.arches = arches
+        self.C = len(arches)
+        self.K = self.C - 1
+        self.n_classes = n_classes
+        self._pickle = pickle
+        # active party's own model (index 0)
+        self.params = init_party(jax.random.PRNGKey(seed), arches[0],
+                                 n_features[0])
+        self.opt = make_optimizer("adam", lr)
+        self.opt_state = self.opt.init(self.params)
+        self.n_features = n_features
+        self.lr = lr
+        self.seed = seed
+        self.conns = []
+        self.procs = []
+
+    def start(self):
+        ctx = mp.get_context("spawn")
+        for k in range(self.K):
+            parent, child = ctx.Pipe()
+            p = ctx.Process(
+                target=_passive_party_main,
+                args=(child, k, self._pickle.dumps(self.arches[k + 1]),
+                      self.n_features[k + 1], self.lr, self.seed + k + 1),
+                daemon=True)
+            p.start()
+            self.conns.append(parent)
+            self.procs.append(p)
+        # key ceremony: collect public keys, redistribute
+        pks = {}
+        for k, c in enumerate(self.conns):
+            c.send(("pubkey",))
+            _, pk = c.recv()
+            pks[k] = pk
+        for k, c in enumerate(self.conns):
+            others = {j: pk for j, pk in pks.items() if j != k}
+            c.send(("setup", others, self.C))
+
+    def round(self, xs: List[np.ndarray], y: np.ndarray, round_idx: int):
+        """One Alg. 1 round. xs: per-party feature arrays (party 0 first)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.losses import softmax_xent
+        from repro.core.party_models import decide_fn, embed_fn
+
+        # step 1: parallel local embeddings (passives return blinded)
+        for k, c in enumerate(self.conns):
+            c.send(("embed", np.asarray(xs[k + 1]), round_idx))
+        E_a, vjp_ea = jax.vjp(
+            lambda pp: embed_fn(pp, self.arches[0], jnp.asarray(xs[0])),
+            self.params)
+        blinded = [c.recv()[1] for c in self.conns]
+        # step 2: secure aggregation (masks cancel in the sum)
+        E = (np.asarray(E_a) + sum(blinded)) / self.C
+        # step 3: parties predict from the global embedding
+        for c in self.conns:
+            c.send(("predict", E))
+        R_a, vjp_da = jax.vjp(
+            lambda pp, e: decide_fn(pp, self.arches[0], e), self.params,
+            jnp.asarray(E))
+        R_passive = [c.recv()[1] for c in self.conns]
+        # step 4: loss assist — active computes dL_k/dR_k for every party
+        y_j = jnp.asarray(y)
+        losses = []
+        for k, (c, R_k) in enumerate(zip(self.conns, R_passive)):
+            L_k, gR = jax.value_and_grad(
+                lambda r: softmax_xent(r, y_j))(jnp.asarray(R_k))
+            losses.append(float(L_k))
+            c.send(("grad", np.asarray(gR)))
+        # step 5: active party's own update
+        L_a, gR_a = jax.value_and_grad(
+            lambda r: softmax_xent(r, y_j))(R_a)
+        g_dec, gE = vjp_da(gR_a)
+        (g_emb,) = vjp_ea(gE / self.C)
+        grads = jax.tree.map(lambda a, b: a + b, g_dec, g_emb)
+        self.params, self.opt_state = self.opt.update(
+            grads, self.opt_state, self.params)
+        for c in self.conns:
+            c.recv()                       # updated acks
+        return [float(L_a)] + losses
+
+    def evaluate(self, xs, y) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.core.party_models import decide_fn, embed_fn
+
+        for k, c in enumerate(self.conns):
+            c.send(("embed", np.asarray(xs[k + 1]), 10 ** 6))
+        E_a = embed_fn(self.params, self.arches[0], jnp.asarray(xs[0]))
+        blinded = [c.recv()[1] for c in self.conns]
+        E = (np.asarray(E_a) + sum(blinded)) / self.C
+        accs = []
+        R_a = decide_fn(self.params, self.arches[0], jnp.asarray(E))
+        accs.append(float((np.argmax(np.asarray(R_a), -1) == y).mean()))
+        for c in self.conns:
+            c.send(("eval", None, E))
+        for c in self.conns:
+            R_k = c.recv()[1]
+            accs.append(float((np.argmax(R_k, -1) == y).mean()))
+        return np.asarray(accs)
+
+    def stop(self):
+        for c in self.conns:
+            try:
+                c.send(("stop",))
+                c.recv()
+            except Exception:
+                pass
+        for p in self.procs:
+            p.join(timeout=10)
+            if p.is_alive():
+                p.terminate()

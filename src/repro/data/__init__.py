@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticClassification, make_dataset, lm_batch_iterator,
+)
+from repro.data.pipeline import batch_iterator, vertical_partition  # noqa: F401

@@ -1,0 +1,60 @@
+"""Fused blind + aggregate Pallas kernel (the paper's Eq. 6 + Eq. 7).
+
+Computes E = (E_a + sum_k (E_k + r_k)) / C in a single VMEM pass over
+(token x d_embed) tiles — the blinded per-party embeddings are never
+materialized in HBM (beyond-paper fusion; the reference path materializes
+[E_k] explicitly the way the paper's protocol transmits them).
+
+The K party dim is kept whole inside each tile (K is small: the paper uses
+C = 4) so the reduction is a VMEM-local sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blind_agg_kernel(ea_ref, ep_ref, m_ref, o_ref, *, inv_c: float):
+    ea = ea_ref[...].astype(jnp.float32)            # (bn, bd)
+    ep = ep_ref[...].astype(jnp.float32)            # (K, bn, bd)
+    msk = m_ref[...].astype(jnp.float32)            # (K, bn, bd)
+    tot = ea + jnp.sum(ep + msk, axis=0)
+    o_ref[...] = (tot * inv_c).astype(o_ref.dtype)
+
+
+def blind_agg(E_active: jnp.ndarray, E_passive: jnp.ndarray,
+              masks: jnp.ndarray, *, block_n: int = 256, block_d: int = 128,
+              interpret: bool = False) -> jnp.ndarray:
+    """E_active (..., d); E_passive/masks (K, ..., d). Returns (..., d)."""
+    K = E_passive.shape[0]
+    C = K + 1
+    orig_shape = E_active.shape
+    d = orig_shape[-1]
+    N = E_active.size // d
+    ea = E_active.reshape(N, d)
+    ep = E_passive.reshape(K, N, d)
+    mk = masks.reshape(K, N, d)
+    bn = min(block_n, N)
+    bd = min(block_d, d)
+    while N % bn:
+        bn //= 2
+    while d % bd:
+        bd //= 2
+    bn, bd = max(bn, 1), max(bd, 1)
+    grid = (N // bn, d // bd)
+    out = pl.pallas_call(
+        functools.partial(_blind_agg_kernel, inv_c=1.0 / C),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((K, bn, bd), lambda i, j: (0, i, j)),
+            pl.BlockSpec((K, bn, bd), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, d), E_active.dtype),
+        interpret=interpret,
+    )(ea, ep, mk)
+    return out.reshape(orig_shape)

@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels execute in interpret mode (kernel body run
+in Python on CPU) — correct but slow; the XLA fallbacks in repro.models are
+what CPU tests/benchmarks use for speed. On TPU, ``interpret=False`` is the
+production path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import blind_agg as _ba
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rg_lru as _rg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_d"))
+def blind_agg(E_active, E_passive, masks, *, block_n: int = 256,
+              block_d: int = 128):
+    return _ba.blind_agg(E_active, E_passive, masks, block_n=block_n,
+                         block_d=block_d, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_w", "chunk"))
+def rglru_scan(a, b, h0, *, block_b: int = 8, block_w: int = 128,
+               chunk: int = 64):
+    return _rg.rglru_scan(a, b, h0, block_b=block_b, block_w=block_w,
+                          chunk=chunk, interpret=not _on_tpu())

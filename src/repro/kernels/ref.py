@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,S,Hq,hd), k/v (B,T,Hkv,hd) -> (B,S,Hq,hd). Naive materialized
+    GQA attention in f32."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def reference_blind_agg(E_active, E_passive, masks):
+    """E = (E_a + sum_k (E_k + r_k)) / C — materializes [E_k] like the
+    paper's wire protocol."""
+    C = 1 + E_passive.shape[0]
+    blinded = E_passive.astype(jnp.float32) + masks.astype(jnp.float32)
+    tot = E_active.astype(jnp.float32) + jnp.sum(blinded, axis=0)
+    return (tot / C).astype(E_active.dtype)
+
+
+def reference_rglru(a, b, h0):
+    """Sequential h_t = a_t * h_{t-1} + b_t. a/b (B,L,W), h0 (B,W)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    hlast, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a32, 1, 0), jnp.moveaxis(b32, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hlast

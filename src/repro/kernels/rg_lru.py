@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for the RG-LRU diagonal linear recurrence.
+
+    h_t = a_t * h_{t-1} + b_t          (elementwise over the width dim)
+
+Tiling: grid (batch tiles, width tiles, time chunks); the time-chunk grid
+dim is innermost/sequential on TPU, carrying h in VMEM scratch across
+chunks; inside a chunk the recurrence runs as a fori_loop over rows held in
+VMEM. The width dim is embarrassingly parallel — width tiles map cleanly
+onto separate grid rows (and, at the SPMD level, onto "model" shards).
+
+The XLA counterpart (models/griffin.py) uses an associative scan, which is
+O(L log L) flops but latency-optimal on small widths; this kernel is the
+O(L) memory-bound form that wins when W/shard is large — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hlast_ref, h_scr, *,
+                  chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)    # (bb, bw)
+
+    a = a_ref[...].astype(jnp.float32)                  # (bb, chunk, bw)
+    b = b_ref[...].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[:, t, :] * h + b[:, t, :]
+        o_ref[:, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        hlast_ref[...] = h.astype(hlast_ref.dtype)
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
+               block_b: int = 8, block_w: int = 128, chunk: int = 64,
+               interpret: bool = False):
+    """a/b (B, L, W) gate/input sequences; h0 (B, W) carried state.
+
+    Returns (h (B, L, W) float32, h_last (B, W) float32).
+    """
+    B, L, W = a.shape
+    block_b = min(block_b, B)
+    block_w = min(block_w, W)
+    chunk = min(chunk, L)
+    while B % block_b:
+        block_b -= 1
+    while W % block_w:
+        block_w //= 2
+    while L % chunk:
+        chunk //= 2
+    block_w, chunk = max(block_w, 1), max(chunk, 1)
+    nc = L // chunk
+    grid = (B // block_b, W // block_w, nc)
+
+    out, hlast = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, chunk, block_w), lambda i, j, c: (i, c, j)),
+            pl.BlockSpec((block_b, chunk, block_w), lambda i, j, c: (i, c, j)),
+            pl.BlockSpec((block_b, block_w), lambda i, j, c: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, chunk, block_w), lambda i, j, c: (i, c, j)),
+            pl.BlockSpec((block_b, block_w), lambda i, j, c: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_b, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out, hlast

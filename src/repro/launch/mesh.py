@@ -1,0 +1,22 @@
+"""Production mesh construction (functions only — importing this module must
+never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 = 256 chips/pod; 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small host mesh for CPU integration tests."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))

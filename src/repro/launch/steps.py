@@ -1,0 +1,207 @@
+"""Jit-able step builders + abstract input specs for the dry-run & launcher.
+
+Everything here works on ShapeDtypeStructs (no allocation) so the 512-way
+dry-run can lower+compile the full-scale configs on a CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shard_rules
+from repro.configs.base import (EasterConfig, InputShape, INPUT_SHAPES,
+                                ModelConfig)
+from repro.core.easter_lm import EasterLM
+from repro.optim import make_optimizer
+
+
+def default_easter(cfg: ModelConfig, enabled: bool = True) -> EasterConfig:
+    """LLM-scale EASTER defaults: C=4 parties (paper's setting), d_embed
+    scaled to the family (the paper's 128 is image-scale; see DESIGN.md)."""
+    d_embed = max(128, min(1024, cfg.d_model // 4))
+    return EasterConfig(num_passive=3, d_embed=d_embed, enabled=enabled)
+
+
+def make_system(cfg: ModelConfig, easter: Optional[EasterConfig] = None
+                ) -> EasterLM:
+    return EasterLM(cfg=cfg, easter=easter or default_easter(cfg))
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def _long_ctx_override(cfg: ModelConfig, shape: InputShape) -> int:
+    """Window override for long_500k on otherwise-full-attention archs."""
+    if shape.name == "long_500k" and cfg.long_ctx_window:
+        return cfg.long_ctx_window
+    return -1
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, sys: EasterLM,
+                for_grad: bool = True) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    adt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S),
+                                                               jnp.int32)}
+        if cfg.family == "encdec":
+            batch["audio_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_frames, cfg.d_model), adt)
+        if cfg.family == "vlm":
+            batch["vision_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_vision_tokens, cfg.d_model), adt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.family == "encdec":
+            batch["audio_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_frames, cfg.d_model), adt)
+        if cfg.family == "vlm":
+            batch["vision_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_vision_tokens, cfg.d_model), adt)
+        return {"batch": batch}
+    # decode: one new token against a cache of length seq_len
+    wo = _long_ctx_override(cfg, shape)
+    caches = jax.eval_shape(lambda: sys.init_caches(B, S, wo))
+    out = {"batch": {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)},
+           "caches": caches,
+           "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.family == "encdec":
+        ae = jax.ShapeDtypeStruct((B, cfg.n_audio_frames, cfg.d_model), adt)
+        out["fe_list"] = jax.eval_shape(
+            lambda p, a: sys.encoder_kv(p, a), _abstract_params(sys), ae)
+    return out
+
+
+def to_shardings(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree (jit-ready)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract_params(sys: EasterLM):
+    return jax.eval_shape(lambda: sys.init_params(jax.random.PRNGKey(0)))
+
+
+def abstract_state(sys: EasterLM, optimizer: str):
+    params = _abstract_params(sys)
+    opt = make_optimizer(optimizer, 1e-3)
+    opt_state = jax.eval_shape(opt.init, params)
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(sys: EasterLM, optimizer: str, lr: float = 1e-4,
+                     grad_clip: float = 1.0):
+    opt = make_optimizer(optimizer, lr, grad_clip=grad_clip)
+    seeds = sys.mask_seeds()
+
+    def train_step(params, opt_state, batch, step_idx):
+        (total, per), grads = jax.value_and_grad(
+            sys.loss_fn, has_aux=True)(params, batch, step_idx, seeds)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": total, "per_party": per}
+        return new_params, new_state, metrics
+
+    return train_step, opt
+
+
+def build_serve_step(sys: EasterLM, shape: InputShape):
+    seeds = sys.mask_seeds()
+    wo = _long_ctx_override(sys.cfg, shape)
+
+    def serve_step(params, batch, caches, pos, fe_list=None):
+        logits, new_caches = sys.serve_step(
+            params, batch["tokens"], caches, pos, seeds,
+            window_override=wo, fe_list=fe_list)
+        return logits, new_caches
+
+    return serve_step
+
+
+def build_prefill_step(sys: EasterLM, shape: InputShape):
+    wo = _long_ctx_override(sys.cfg, shape)
+
+    def prefill_step(params, batch):
+        B, S = batch["tokens"].shape
+        fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
+        fe_list = [dict(fe) for _ in range(sys.C)] if fe else None
+        caches = sys.init_caches(B, S, wo)
+        E, new_caches = sys.prefill(params, batch["tokens"], caches,
+                                    window_override=wo, fe_list=fe_list)
+        return E, new_caches
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly
+# ---------------------------------------------------------------------------
+
+
+def use_fsdp(sys: EasterLM, kind: str = "train") -> bool:
+    """FSDP parameter sharding for actives too big to replicate over data.
+
+    §Perf H2 history: the decode collective bytes were initially blamed on
+    FSDP parameter gathers; disabling serve-FSDP left collectives unchanged
+    (hypothesis REFUTED — the real cost was the f32 re-gather of the whole
+    KV cache from a replicated-heads cache layout, fixed in the cache
+    sharding rules) and *hurt* memory (params replicated over data). FSDP
+    is therefore size-based for every step kind.
+    """
+    return sys.cfg.param_count() > 1e10
+
+
+def train_shardings(sys: EasterLM, mesh, specs, params, opt_state,
+                    zero1: bool = False, layout: str = "tp"):
+    fsdp = use_fsdp(sys)
+    pspec = shard_rules.param_specs(params, mesh, fsdp, layout)
+    ospec = shard_rules.opt_state_specs(opt_state, params, mesh, zero1=zero1,
+                                        fsdp=fsdp, layout=layout)
+    bspec = shard_rules.batch_specs(specs["batch"], mesh, layout)
+    in_shardings = (pspec, ospec, bspec, P())
+    out_shardings = (pspec, ospec,
+                     {"loss": P(), "per_party": P()})
+    return in_shardings, out_shardings
+
+
+def serve_shardings(sys: EasterLM, mesh, specs, params,
+                    fsdp: bool | None = None):
+    if fsdp is None:
+        fsdp = use_fsdp(sys, "serve")
+    pspec = shard_rules.param_specs(params, mesh, fsdp)
+    B = specs["batch"]["tokens"].shape[0]
+    cspec = shard_rules.cache_specs(specs["caches"], mesh, B)
+    bspec = shard_rules.batch_specs(specs["batch"], mesh)
+    logits_spec = bspec["tokens"] if isinstance(bspec, dict) else P()
+    args = [pspec, bspec, cspec, P()]
+    outs = (P(), cspec)
+    if "fe_list" in specs:
+        fspec = jax.tree.map(lambda l: P(), specs["fe_list"])
+        args.append(fspec)
+    return tuple(args), outs
+
+
+def prefill_shardings(sys: EasterLM, mesh, specs, params,
+                      out_caches, fsdp: bool | None = None):
+    if fsdp is None:
+        fsdp = use_fsdp(sys, "prefill")
+    pspec = shard_rules.param_specs(params, mesh, fsdp)
+    bspec = shard_rules.batch_specs(specs["batch"], mesh)
+    B = specs["batch"]["tokens"].shape[0]
+    cspec = shard_rules.cache_specs(out_caches, mesh, B)
+    return (pspec, bspec), (P(), cspec)

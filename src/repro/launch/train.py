@@ -1,0 +1,111 @@
+"""Training launcher: EASTER multi-party LM training end-to-end.
+
+CPU example (reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+        --steps 50 --batch 4 --seq 64
+Production mesh usage mirrors the dry-run (see launch/dryrun.py); on real
+TPU hardware drop --smoke and pass --mesh data,model.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs.base import EasterConfig, get_config, smoke_variant
+from repro.core.easter_lm import EasterLM
+from repro.data.synthetic import lm_batch_iterator
+from repro.launch import steps as steps_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--num-passive", type=int, default=3)
+    ap.add_argument("--d-embed", type=int, default=128)
+    ap.add_argument("--mask-mode", default="float",
+                    choices=["float", "int32"])
+    ap.add_argument("--no-easter", action="store_true")
+    ap.add_argument("--grad-mode", default="easter",
+                    choices=["easter", "joint"])
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params/opt state from --ckpt if present")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    easter = EasterConfig(num_passive=args.num_passive,
+                          d_embed=args.d_embed, mask_mode=args.mask_mode,
+                          enabled=not args.no_easter)
+    sys_ = EasterLM(cfg=cfg, easter=easter, grad_mode=args.grad_mode)
+    print(f"arch={cfg.name} parties={sys_.C} "
+          f"party_depths={[c.n_layers for c in sys_.party_cfgs]} "
+          f"d_embed={easter.d_embed}")
+
+    params = sys_.init_params(jax.random.PRNGKey(args.seed))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"total params (all parties): {n:,}")
+
+    train_step, opt = steps_mod.build_train_step(sys_, args.optimizer,
+                                                 lr=args.lr)
+    opt_state = opt.init(params)
+    start_step = 0
+    if args.resume and args.ckpt and os.path.exists(args.ckpt):
+        (state, step0) = checkpoint.restore(args.ckpt,
+                                            {"params": params,
+                                             "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start_step = step0 or 0
+        print(f"resumed from {args.ckpt} at step {start_step}")
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    it = lm_batch_iterator(cfg.vocab_size, args.batch, args.seq,
+                           seed=args.seed)
+    t0 = time.perf_counter()
+    history = []
+    for i in range(start_step, start_step + args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.asarray(i, jnp.int32))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            per = np.round(np.asarray(metrics["per_party"]), 4)
+            dt = time.perf_counter() - t0
+            tok_s = (i + 1) * args.batch * args.seq / dt
+            print(f"step {i:5d} loss {loss:9.4f} per-party {per} "
+                  f"({tok_s:,.0f} tok/s)")
+            history.append({"step": i, "loss": loss,
+                            "per_party": per.tolist()})
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, {"params": params,
+                                        "opt": opt_state}, step=i + 1)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, {"params": params, "opt": opt_state},
+                        step=start_step + args.steps)
+        print(f"checkpoint -> {args.ckpt}")
+    out = {"arch": cfg.name, "history": history}
+    os.makedirs("experiments/train", exist_ok=True)
+    with open(f"experiments/train/{cfg.name}_train.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

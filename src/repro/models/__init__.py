@@ -1,0 +1,1 @@
+from repro.models.build import ModelFns, build, frontend_inputs  # noqa: F401

@@ -1,0 +1,52 @@
+"""Config -> model functions registry."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    cfg: ModelConfig
+    init: Callable          # (key) -> params
+    apply: Callable         # (params, tokens, **kw) -> (logits, caches, aux)
+    init_cache: Callable    # (batch, cache_len, window_override=-1) -> caches
+
+
+def build(cfg: ModelConfig) -> ModelFns:
+    def init(key):
+        return transformer.init_lm(key, cfg)
+
+    def apply(params, tokens, **kw):
+        return transformer.apply_lm(params, tokens, cfg, **kw)
+
+    def init_cache(batch, cache_len, window_override: int = -1):
+        return transformer.init_cache(cfg, batch, cache_len, window_override)
+
+    return ModelFns(cfg=cfg, init=init, apply=apply, init_cache=init_cache)
+
+
+def frontend_inputs(cfg: ModelConfig, batch: int, key=None,
+                    as_spec: bool = False, dtype=None):
+    """Stubbed modality-frontend embeddings (the one allowed stub).
+
+    audio: whisper conv/mel output (B, n_frames, d_model);
+    vlm:   ViT patch embeddings (B, n_vision_tokens, d_model).
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.family == "encdec":
+        shp = (batch, cfg.n_audio_frames, cfg.d_model)
+        out["audio_embed"] = (jax.ShapeDtypeStruct(shp, dtype) if as_spec
+                              else jax.random.normal(key, shp, dtype))
+    if cfg.family == "vlm" and cfg.n_vision_tokens:
+        shp = (batch, cfg.n_vision_tokens, cfg.d_model)
+        out["vision_embed"] = (jax.ShapeDtypeStruct(shp, dtype) if as_spec
+                               else jax.random.normal(key, shp, dtype))
+    return out

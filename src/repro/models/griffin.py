@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin). [arXiv:2402.19427]
+
+Training/prefill: associative scan over the diagonal linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t)
+Decode: single-step state update; state is (B, W) — O(1) in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _dense_init, init_linear, linear
+from repro.models.ssm import _depthwise_conv
+
+RG_LRU_C = 8.0
+CONV_W = 4
+
+
+def init_rglru(key, d_model: int, width: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": init_linear(ks[0], d_model, width, False, dtype),
+        "in_gate": init_linear(ks[1], d_model, width, False, dtype),
+        "conv_w": _dense_init(ks[2], (CONV_W, width), dtype, scale=0.5),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_r": init_linear(ks[3], width, width, True, dtype),
+        "w_i": init_linear(ks[4], width, width, True, dtype),
+        # Lambda init so that a ~ U[0.9, 0.999]^c (Griffin appendix)
+        "lam": jnp.linspace(0.2, 2.0, width).astype(jnp.float32),
+        "out": init_linear(ks[5], width, d_model, False, dtype),
+    }
+
+
+def _gates(p: dict, x: jnp.ndarray):
+    r = jax.nn.sigmoid(linear(p["w_r"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["w_i"], x).astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(p: dict, x: jnp.ndarray,
+               init_state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, L, W) — returns (h (B,L,W) f32, final state (B,W) f32)."""
+    a, b = _gates(p, x)
+    if init_state is not None:
+        # fold carried state into the first step: h_0 = a_0*s + b_0
+        b = b.at[:, 0].add(a[:, 0] * init_state)
+
+    def comb(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(comb, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(p: dict, x: jnp.ndarray, state: jnp.ndarray):
+    """x (B, 1, W), state (B, W) -> (h (B,1,W), new_state)."""
+    a, b = _gates(p, x)
+    h = a[:, 0] * state + b[:, 0]
+    return h[:, None], h
+
+
+def recurrent_block(p: dict, x: jnp.ndarray, cache: Optional[dict] = None):
+    """Griffin recurrent block: gated conv + RG-LRU. x (B,L,d_model).
+    cache {"conv": (B, CONV_W-1, W), "state": (B, W)}. Returns (out, cache)."""
+    gate = jax.nn.gelu(linear(p["in_gate"], x))
+    xb = linear(p["in_x"], x)
+    conv_cache = cache["conv"] if cache is not None else None
+    xb, new_conv = _depthwise_conv(xb, p["conv_w"], p["conv_b"], conv_cache)
+    if cache is not None and x.shape[1] == 1:
+        h, new_state = rglru_step(p, xb, cache["state"])
+    else:
+        init_state = cache["state"] if cache is not None else None
+        h, new_state = rglru_scan(p, xb, init_state)
+    y = h.astype(x.dtype) * gate
+    out = linear(p["out"], y)
+    new_cache = {"conv": new_conv.astype(x.dtype), "state": new_state}
+    return out, new_cache
+
+
+def init_rglru_cache(batch: int, width: int, dtype) -> dict:
+    return {"conv": jnp.zeros((batch, CONV_W - 1, width), dtype),
+            "state": jnp.zeros((batch, width), jnp.float32)}

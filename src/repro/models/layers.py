@@ -1,0 +1,408 @@
+"""Core neural-net layers (pure JAX, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays;
+  * ``init_*`` functions take a PRNG key and return params;
+  * compute in bf16/f32 per config, softmax/norm statistics in f32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool, dtype) -> dict:
+    p = {"w": _dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": _dense_init(key, (vocab, d), dtype, scale=1.0)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layer norm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rms norm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim/2)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]):
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) — temporal/height/width position ids.
+    sections: split of head_dim/2 across the three components.
+    Returns cos/sin (B, S, head_dim/2) assembled per-section.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    cos, sin = rope_cos_sin(positions, head_dim, theta)  # (3, B, S, hd/2)
+    parts_c, parts_s = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts_c.append(cos[i, ..., off:off + sec])
+        parts_s.append(sin[i, ..., off:off + sec])
+        off += sec
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, bias: bool, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(kq, d_model, n_heads * head_dim, bias, dtype),
+        "wk": init_linear(kk, d_model, n_kv_heads * head_dim, bias, dtype),
+        "wv": init_linear(kv, d_model, n_kv_heads * head_dim, bias, dtype),
+        "wo": init_linear(ko, n_heads * head_dim, d_model, False, dtype),
+    }
+
+
+def _gqa_logits(q, k):
+    """q (B,S,Hq,hd), k (B,T,Hkv,hd) -> logits (B,Hkv,G,S,T)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def _gqa_out(probs, v):
+    """probs (B,Hkv,G,S,T), v (B,T,Hkv,hd) -> (B,S,Hq,hd)."""
+    B, Hkv, G, S, T = probs.shape
+    o = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return o.reshape(B, S, Hkv * G, -1)
+
+
+def attention_mask(q_pos: jnp.ndarray, kv_pos: jnp.ndarray,
+                   causal: bool, window: int) -> jnp.ndarray:
+    """(S, T) boolean: True = attend. window>0 -> sliding window."""
+    dq = q_pos[:, None]
+    dk = kv_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= dk <= dq
+    if window > 0:
+        m &= dk > dq - window
+    return m
+
+
+def dot_attention(q, k, v, *, causal: bool, window: int = 0,
+                  q_offset: int | jnp.ndarray = 0,
+                  kv_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Materialized attention. q (B,S,Hq,hd), k/v (B,T,Hkv,hd).
+
+    q_offset: absolute position of q[0] (decode: cache length index).
+    kv_valid: (T,) or (B,T) bool — which cache slots are filled.
+    """
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = _gqa_logits(q * scale, k)  # (B,Hkv,G,S,T) f32
+    q_pos = jnp.arange(S) + q_offset
+    kv_pos = jnp.arange(T)
+    mask = attention_mask(q_pos, kv_pos, causal, window)  # (S,T)
+    if kv_valid is not None:
+        kvv = kv_valid if kv_valid.ndim == 2 else kv_valid[None]
+        mask = mask[None] & kvv[:, None, :]              # (B,S,T)
+        mask = mask[:, None, None]                       # (B,1,1,S,T)
+    else:
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return _gqa_out(probs, v).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024
+                      ) -> jnp.ndarray:
+    """Flash-style XLA attention: double scan (query x kv chunks) with an
+    online softmax. Live memory is O(q_chunk * kv_chunk) logit tiles — the
+    pure-XLA long-context path used where the Pallas kernel is unavailable
+    (CPU dry-run backend). f32 accumulation throughout.
+    """
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, T, q_chunk, kv_chunk)
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+
+    def q_body(_, qi):
+        q0 = qi * q_chunk
+        qc = lax.dynamic_slice_in_dim(q, q0, q_chunk, axis=1) * scale
+        q_pos = jnp.arange(q_chunk) + q0
+
+        @jax.checkpoint
+        def kv_body(carry, ki):
+            # rematted: without this, scan autodiff saves every (qc, kc)
+            # logit tile for the backward pass == the full S x T logits.
+            m, l, acc = carry               # (B,Hkv,G,qc) x2, (B,qc,Hq,hd)
+            k0 = ki * kv_chunk
+            kc = lax.dynamic_slice_in_dim(k, k0, kv_chunk, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, k0, kv_chunk, axis=1)
+            logits = _gqa_logits(qc, kc)    # (B,Hkv,G,qc,kc) f32
+            kv_pos = jnp.arange(kv_chunk) + k0
+            mask = attention_mask(q_pos, kv_pos, causal, window)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_tile = _gqa_out(p, vc)        # (B,qc,Hq,hd) f32 (unnormalized)
+            corr_o = corr.reshape(B, Hkv * G, q_chunk)  # (B,Hq,qc)
+            acc_new = acc * jnp.moveaxis(corr_o, 1, 2)[..., None] + o_tile
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, Hq, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_body, (m0, l0, a0), jnp.arange(nk))
+        l_r = jnp.moveaxis(l.reshape(B, Hq, q_chunk), 1, 2)  # (B,qc,Hq)
+        out = acc / jnp.maximum(l_r, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = lax.scan(q_body, None, jnp.arange(nq))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, Hq, hd)
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Per-(token, head) symmetric int8 quantization. x (B,S,H,hd) ->
+    (q int8, scale f16 (B,S,H,1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def self_attention(params: dict, x: jnp.ndarray, *, n_heads: int,
+                   n_kv_heads: int, head_dim: int, causal: bool = True,
+                   window: int = 0, cos=None, sin=None,
+                   cache: Optional[dict] = None,
+                   mode: str = "auto", q_chunk: int = 1024):
+    """Full self-attention layer (projections + rope + attend + out-proj).
+
+    cache: {"k","v": (B, T_cache, Hkv, hd), "idx": ()} — decode path writes
+    the new K/V at position idx (mod T_cache for sliding windows).
+    Quantized caches (§Perf H2-it3) additionally carry "k_scale"/"v_scale"
+    with int8 "k"/"v"; reads dequantize, writes quantize.
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    q = linear(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(B, S, n_kv_heads, head_dim)
+    v = linear(params["wv"], x).reshape(B, S, n_kv_heads, head_dim)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        T = cache["k"].shape[1]
+        idx = cache["idx"]
+        quant = "k_scale" in cache
+
+        def write(buf, val, slot):
+            return lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+
+        if S == 1:
+            if window > 0:
+                slot = (idx % T).astype(jnp.int32)
+            else:
+                slot = jnp.minimum(idx, T - 1).astype(jnp.int32)
+            if quant:
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                new_cache = {"k": write(cache["k"], kq, slot),
+                             "k_scale": write(cache["k_scale"], ks, slot),
+                             "v": write(cache["v"], vq, slot),
+                             "v_scale": write(cache["v_scale"], vs, slot),
+                             "idx": idx + 1}
+                ck = dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                   x.dtype)
+                cv = dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                   x.dtype)
+            else:
+                ck = write(cache["k"], k, slot)
+                cv = write(cache["v"], v, slot)
+                new_cache = {"k": ck, "v": cv, "idx": idx + 1}
+            kv_pos_abs = _cache_positions(T, idx, window)
+            valid = kv_pos_abs >= 0
+            scale = 1.0 / math.sqrt(head_dim)
+            logits = _gqa_logits(q * scale, ck)  # (B,Hkv,G,1,T)
+            mask = valid & (kv_pos_abs <= idx)
+            if window > 0:
+                mask &= kv_pos_abs > idx - window
+            logits = jnp.where(mask[None, None, None, None, :], logits,
+                               NEG_INF)
+            probs = jax.nn.softmax(logits, axis=-1)
+            attn = _gqa_out(probs, cv).astype(x.dtype)
+        else:  # prefill: write the (last T of the) prefix
+            if window > 0 and S >= T:
+                # ring-buffer layout: slot s holds position p with p % T == s.
+                # last T positions are S-T..S-1; roll so position p lands at
+                # slot p % T.
+                kw, vw = jnp.roll(k[:, -T:], S % T, axis=1), \
+                    jnp.roll(v[:, -T:], S % T, axis=1)
+                if quant:
+                    kq, ks = quantize_kv(kw)
+                    vq, vs = quantize_kv(vw)
+                    new_cache = {"k": kq, "k_scale": ks, "v": vq,
+                                 "v_scale": vs,
+                                 "idx": jnp.asarray(S, jnp.int32)}
+                else:
+                    new_cache = {"k": kw, "v": vw,
+                                 "idx": jnp.asarray(S, jnp.int32)}
+            else:
+                eff = min(T, S)
+                if quant:
+                    kq, ks = quantize_kv(k[:, -eff:])
+                    vq, vs = quantize_kv(v[:, -eff:])
+                    new_cache = {"k": write(cache["k"], kq, 0),
+                                 "k_scale": write(cache["k_scale"], ks, 0),
+                                 "v": write(cache["v"], vq, 0),
+                                 "v_scale": write(cache["v_scale"], vs, 0),
+                                 "idx": jnp.asarray(S, jnp.int32)}
+                else:
+                    new_cache = {"k": write(cache["k"], k[:, -eff:], 0),
+                                 "v": write(cache["v"], v[:, -eff:], 0),
+                                 "idx": jnp.asarray(S, jnp.int32)}
+            attn = _attend(q, k, v, causal, window, mode, q_chunk)
+    else:
+        attn = _attend(q, k, v, causal, window, mode, q_chunk)
+
+    out = linear(params["wo"], attn.reshape(B, S, n_heads * head_dim))
+    return out, new_cache
+
+
+def _cache_positions(T: int, idx, window: int) -> jnp.ndarray:
+    """Absolute position stored in each cache slot (-1 = empty)."""
+    slots = jnp.arange(T)
+    if window > 0:
+        # ring buffer: slot s holds position p where p % T == s, the largest
+        # such p < idx+1 (after this step's write at idx).
+        cur = idx  # position just written
+        p = cur - ((cur - slots) % T)
+        return jnp.where(p >= 0, p, -1)
+    return jnp.where(slots <= idx, slots, -1)
+
+
+def _attend(q, k, v, causal, window, mode, q_chunk):
+    S = q.shape[1]
+    if mode == "chunked" or (mode == "auto" and S > 2048 and S % q_chunk == 0):
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_chunk=q_chunk)
+    return dot_attention(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_linear(k1, d_model, d_ff, False, dtype),
+         "down": init_linear(k2, d_ff, d_model, False, dtype)}
+    if act == "silu":  # SwiGLU
+        p["gate"] = init_linear(k3, d_model, d_ff, False, dtype)
+    return p
+
+
+def mlp(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    else:
+        h = jax.nn.gelu(linear(p["up"], x))
+    return linear(p["down"], h)

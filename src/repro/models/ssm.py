@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) block. [arXiv:2405.21060]
+
+Training/prefill use the chunked dual form: quadratic attention-like compute
+inside chunks of length Q, linear recurrence across chunks (lax.scan).
+Decode is the O(1) recurrent step on state (B, H, P, N) — no token cache,
+which is what makes ``long_500k`` native for this family.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import _dense_init, apply_norm, init_norm
+
+N_GROUPS = 1  # B/C projection groups
+
+
+def ssm_dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * N_GROUPS * cfg.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, H, conv_dim = ssm_dims(d_model, cfg)
+    ks = jax.random.split(key, 4)
+    zxbcdt = 2 * d_inner + 2 * N_GROUPS * cfg.d_state + H
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, zxbcdt), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.d_conv, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),     # softplus ~ 0.12
+        "norm": init_norm("rms", d_inner, dtype),
+        "out_proj": _dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x (..., q) -> (..., q, q) lower-tri segment sums: out[i,j]=sum(x[j+1..i])."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """SSD dual-form scan.
+
+    x (b,l,h,p) f32, dt (b,l,h) f32 (already softplus'ed), A (h,) f32 (<0),
+    B/C (b,l,g,n) f32. Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    r = lambda t: t.reshape(b, nc, chunk, *t.shape[2:])
+    xc, dtc, Bc, Cc = r(x), r(dt), r(B), r(C)
+
+    dA = dtc * A                                   # (b,nc,q,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))  # (b,nc,h,q,q)
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (b,nc,g,q,k)
+    CB = jnp.repeat(CB, h // g, axis=2)            # broadcast groups->heads
+    scores = CB * L
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+
+    # chunk-final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (b,nc,q,h)
+    states = jnp.einsum("bcqgn,bcqh,bcqhp->bchpn",
+                        Bc, decay_states * dtc, xc)        # (b,nc,h,p,n)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (b,nc,h)
+    s0 = jnp.zeros((b, h, p, n), x.dtype) if init_state is None \
+        else init_state.astype(x.dtype)
+
+    def step(s, inp):
+        dec, st = inp
+        s_new = s * dec[:, :, None, None] + st
+        return s_new, s
+
+    (final_state, prev_states) = lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (b,nc,h,p,n)
+
+    # contribution of carried-in state
+    state_decay = jnp.exp(dA_cs)                           # (b,nc,q,h)
+    y_off = jnp.einsum("bcqgn,bchpn,bcqh->bcqhp",
+                       Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One-token recurrence. state (b,h,p,n); x (b,h,p); dt (b,h);
+    B/C (b,g,n). Returns (y (b,h,p), new_state)."""
+    b, h, p, n = state.shape
+    dA = jnp.exp(dt * A)                                  # (b,h)
+    Bx = jnp.einsum("bgn,bh,bhp->bhpn", B, dt, x)
+    new_state = state * dA[:, :, None, None] + Bx
+    y = jnp.einsum("bgn,bhpn->bhp", C, new_state)
+    return y, new_state
+
+
+def _depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                    cache: Optional[jnp.ndarray] = None):
+    """Causal depthwise conv. x (B,L,D), w (W,D). cache (B,W-1,D) or None.
+    Returns (y (B,L,D), new_cache (B,W-1,D))."""
+    W = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B, L+W-1, D)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_cache = xp[:, -(W - 1):]
+    return y, new_cache
+
+
+def ssm_block(p: dict, x: jnp.ndarray, cfg: SSMConfig,
+              cache: Optional[dict] = None, rms_eps: float = 1e-6):
+    """Full Mamba-2 mixer. x (B,L,d_model). cache {"conv","state"} for decode.
+    Returns (out, new_cache)."""
+    Bsz, L, d_model = x.shape
+    d_inner, H, conv_dim = ssm_dims(d_model, cfg)
+    g, n, P = N_GROUPS, cfg.d_state, cfg.head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _depthwise_conv(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    xh = xs.reshape(Bsz, L, H, P).astype(jnp.float32)
+    Bm = Bmat.reshape(Bsz, L, g, n).astype(jnp.float32)
+    Cm = Cmat.reshape(Bsz, L, g, n).astype(jnp.float32)
+
+    if cache is not None and L == 1:
+        y, new_state = ssd_decode_step(
+            cache["state"], xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y[:, None]                                    # (B,1,H,P)
+    else:
+        init_state = cache["state"] if cache is not None else None
+        chunk = min(cfg.chunk, L)
+        if L % chunk:
+            chunk = math.gcd(L, chunk) or 1
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, chunk, init_state)
+
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(Bsz, L, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = apply_norm(p["norm"], y, rms_eps)
+    out = y @ p["out_proj"]
+    new_cache = {"conv": new_conv.astype(x.dtype), "state": new_state}
+    return out, new_cache
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner, H, conv_dim = ssm_dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, H, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+    }

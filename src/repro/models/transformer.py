@@ -1,0 +1,416 @@
+"""Decoder-only / encoder-decoder stacks for every assigned family.
+
+Layer stacks are organized as (pattern, repeats) *segments* so that
+homogeneous runs compile via ``lax.scan`` over stacked params — essential to
+keep XLA compile time tractable for 94-layer models on the 512-way dry-run.
+
+  dense (no SWA):     [(("attn",), n_layers)]
+  gemma3 (5:1):       [(("local",)*5 + ("global",), reps), (("local",), rem)]
+  moe:                [(("moe",), n_layers)]
+  ssm:                [(("ssm",), n_layers)]
+  hybrid (1:2):       [(("lru","lru","attn"), reps), (rem_pattern, 1)]
+
+Caches mirror the segment structure: per segment, per pattern position, a
+stacked (reps, ...) pytree carried through the decode scan.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import griffin, moe as moe_mod, ssm as ssm_mod
+from repro.models.layers import (
+    apply_norm, embed, init_attention, init_embedding, init_mlp, init_norm,
+    linear, init_linear, mlp, mrope_cos_sin, rope_cos_sin, self_attention,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# stack plan
+# ---------------------------------------------------------------------------
+
+
+def stack_plan(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    if cfg.family == "moe":
+        kinds = ("moe",)
+    elif cfg.family == "ssm":
+        kinds = ("ssm",)
+    elif cfg.family == "hybrid":
+        kinds = tuple(cfg.hybrid.pattern)
+    elif cfg.window > 0:
+        l, g = cfg.swa_pattern
+        kinds = ("local",) * l + ("global",) * g
+    else:
+        kinds = ("attn",)
+    p = len(kinds)
+    reps, rem = divmod(cfg.n_layers, p)
+    plan = []
+    if reps:
+        plan.append((kinds, reps))
+    if rem:
+        plan.append((kinds[:rem], 1))
+    return plan
+
+
+def _layer_window(cfg: ModelConfig, kind: str, decode_long: bool = False) -> int:
+    if kind == "local":
+        return cfg.window
+    if kind == "attn" and cfg.family == "hybrid":
+        return cfg.hybrid.window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# per-kind block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    import numpy as np
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "ssm": ssm_mod.init_ssm(k1, d, cfg.ssm, dtype)}
+    if kind == "lru":
+        w = cfg.hybrid.lru_width or d
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "rec": griffin.init_rglru(k1, d, w, dtype),
+                "ln2": init_norm(cfg.norm, d, dtype),
+                "mlp": init_mlp(k2, d, cfg.d_ff, cfg.act, dtype)}
+    attn = init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.resolved_head_dim, cfg.qkv_bias, dtype)
+    p = {"ln1": init_norm(cfg.norm, d, dtype), "attn": attn,
+         "ln2": init_norm(cfg.norm, d, dtype)}
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(k2, d, cfg.moe, cfg.act, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, d, cfg.d_ff, cfg.act, dtype)
+    if kind == "xattn":
+        p["lnx"] = init_norm(cfg.norm, d, dtype)
+        p["xattn"] = init_attention(k3, d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim, cfg.qkv_bias, dtype)
+    return p
+
+
+def apply_block(p: Params, x: jnp.ndarray, *, cfg: ModelConfig, kind: str,
+                cos, sin, cache: Optional[dict], window_override: int = -1,
+                causal: bool = True):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h, new_cache = ssm_mod.ssm_block(p["ssm"], apply_norm(p["ln1"], x,
+                                         cfg.rms_eps), cfg.ssm,
+                                         cache, cfg.rms_eps)
+        return x + h, new_cache, aux
+    if kind == "lru":
+        h, new_cache = griffin.recurrent_block(
+            p["rec"], apply_norm(p["ln1"], x, cfg.rms_eps), cache)
+        x = x + h
+        x = x + mlp(p["mlp"], apply_norm(p["ln2"], x, cfg.rms_eps), cfg.act)
+        return x, new_cache, aux
+
+    window = _layer_window(cfg, kind) if window_override < 0 else window_override
+    h, new_cache = self_attention(
+        p["attn"], apply_norm(p["ln1"], x, cfg.rms_eps),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, causal=causal, window=window,
+        cos=cos, sin=sin, cache=cache)
+    x = x + h
+    if kind == "moe":
+        h, aux = moe_mod.moe_ffn(p["moe"],
+                                 apply_norm(p["ln2"], x, cfg.rms_eps),
+                                 cfg.moe, cfg.act)
+    else:
+        h = mlp(p["mlp"], apply_norm(p["ln2"], x, cfg.rms_eps), cfg.act)
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                 window_override: int = -1):
+    dtype = jnp.dtype(cfg.dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    if kind == "lru":
+        return griffin.init_rglru_cache(
+            batch, cfg.hybrid.lru_width or cfg.d_model, dtype)
+    window = _layer_window(cfg, kind) if window_override < 0 else window_override
+    T = min(cache_len, window) if window > 0 else cache_len
+    hd = cfg.resolved_head_dim
+    if cfg.kv_quant:
+        return {"k": jnp.zeros((batch, T, cfg.n_kv_heads, hd), jnp.int8),
+                "k_scale": jnp.zeros((batch, T, cfg.n_kv_heads, 1),
+                                     jnp.bfloat16),
+                "v": jnp.zeros((batch, T, cfg.n_kv_heads, hd), jnp.int8),
+                "v_scale": jnp.zeros((batch, T, cfg.n_kv_heads, 1),
+                                     jnp.bfloat16),
+                "idx": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((batch, T, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, T, cfg.n_kv_heads, hd), dtype),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               window_override: int = -1):
+    """Stacked cache pytree mirroring stack_plan."""
+    segs = []
+    for kinds, reps in stack_plan(cfg):
+        seg = {}
+        for i, kind in enumerate(kinds):
+            one = _block_cache(cfg, kind, batch, cache_len, window_override)
+            seg[f"p{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy() if reps > 1
+                else a[None], one)
+        segs.append(seg)
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# LM init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_linear(keys[1], cfg.d_model, cfg.vocab_size,
+                                     False, dtype)
+    segs = []
+    kseg = keys[2]
+    for si, (kinds, reps) in enumerate(stack_plan(cfg)):
+        seg = {}
+        for i, kind in enumerate(kinds):
+            lkeys = jax.random.split(jax.random.fold_in(kseg, si * 64 + i),
+                                     reps)
+            seg[f"p{i}"] = jax.vmap(lambda k: init_block(k, cfg, kind))(lkeys)
+        segs.append(seg)
+    params["segments"] = segs
+    if cfg.family == "encdec":
+        params["encoder"] = _init_encoder(keys[3], cfg)
+        # decoder cross-attention per layer (single segment assumed)
+        xkeys = jax.random.split(keys[4], cfg.n_layers)
+        params["xattn"] = jax.vmap(
+            lambda k: {
+                "lnx": init_norm(cfg.norm, cfg.d_model, dtype),
+                "attn": init_attention(k, cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.resolved_head_dim,
+                                       cfg.qkv_bias, dtype)})(xkeys)
+    return params
+
+
+def _init_encoder(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_encoder_layers + 1)
+    blocks = jax.vmap(lambda k: init_block(k, cfg, "attn"))(
+        keys[:cfg.n_encoder_layers])
+    return {"blocks": blocks,
+            "norm": init_norm(cfg.norm, cfg.d_model, jnp.dtype(cfg.dtype))}
+
+
+def _sinusoid(S: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _cos_sin(cfg: ModelConfig, positions: jnp.ndarray,
+             mrope_pos: Optional[jnp.ndarray]):
+    hd = cfg.resolved_head_dim
+    if cfg.rope_theta <= 0:
+        return None, None
+    if cfg.family == "vlm" and mrope_pos is not None:
+        return mrope_cos_sin(mrope_pos, hd, cfg.rope_theta,
+                             cfg.mrope_sections)
+    return rope_cos_sin(positions, hd, cfg.rope_theta)
+
+
+def _run_segments(params, x, *, cfg: ModelConfig, cos, sin,
+                  caches, window_override: int = -1,
+                  xattn: Optional[Tuple] = None):
+    """Scan over each (pattern, reps) segment. Returns (x, new_caches, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    plan = stack_plan(cfg)
+    layer_offset = 0
+    for si, (kinds, reps) in enumerate(plan):
+        seg_params = params["segments"][si]
+        seg_cache = caches[si] if caches is not None else None
+
+        def body(carry, xs):
+            from repro import sharding as shard_hints
+            x, aux = carry
+            p_rep, c_rep, x_rep = xs
+            new_c = {}
+            for i, kind in enumerate(kinds):
+                blk_cache = c_rep[f"p{i}"] if c_rep is not None else None
+                x, nc, a = apply_block(
+                    p_rep[f"p{i}"], x, cfg=cfg, kind=kind, cos=cos, sin=sin,
+                    cache=blk_cache, window_override=window_override)
+                if nc is not None:
+                    new_c[f"p{i}"] = nc
+                aux = aux + a
+                if x_rep is not None:
+                    x = _apply_xattn(x_rep, x, cfg)
+            # sequence-parallel residual stream: the carry (and therefore the
+            # per-layer stack saved for backward) shards S over "model";
+            # GSPMD inserts all-gather before qkv/mlp and reduce-scatter
+            # after the output projections (Megatron-SP pattern).
+            x = shard_hints.constrain(x, ("batch", "model", None))
+            return (x, aux), (new_c if new_c else None)
+
+        # prevent_cse=False is safe only under scan (the loop boundary blocks
+        # CSE); in the unrolled cost pass XLA would CSE the recompute away.
+        pcse = not cfg.scan_layers
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=pcse)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_saveable,
+                prevent_cse=pcse)
+
+        xattn_xs = None
+        if xattn is not None:
+            assert len(kinds) == 1, "cross-attention assumes pattern len 1"
+            xp, (ek, ev) = xattn
+            nlay = reps * len(kinds)
+            sl = jax.tree.map(
+                lambda a: lax.dynamic_slice_in_dim(a, layer_offset, nlay, 0),
+                (xp, ek, ev))
+            xattn_xs = sl  # (params, ek, ev) each with leading (reps,)
+
+        xs = (seg_params, seg_cache, xattn_xs)
+        if cfg.scan_layers:
+            (x, aux_total), seg_new_cache = lax.scan(
+                body, (x, aux_total), xs)
+        else:
+            # unrolled path: identical semantics; used by the dry-run cost
+            # pass because XLA cost_analysis counts a while-loop body ONCE
+            # (verified empirically), which would undercount scanned stacks
+            # by a factor of `reps`.
+            ys = []
+            carry = (x, aux_total)
+            for r in range(reps):
+                xs_r = jax.tree.map(lambda a: a[r], xs)
+                carry, y = body(carry, xs_r)
+                ys.append(y)
+            (x, aux_total) = carry
+            seg_new_cache = (jax.tree.map(lambda *a: jnp.stack(a), *ys)
+                             if ys and ys[0] is not None else None)
+        new_caches.append(seg_new_cache)
+        layer_offset += reps * len(kinds)
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def _apply_xattn(x_rep, x, cfg: ModelConfig):
+    """Cross-attention insert (encdec decoder). x_rep = (params, ek, ev)
+    for THIS layer: ek/ev (B, F, Hkv, hd)."""
+    xp_rep, ek, ev = x_rep
+    h = apply_norm(xp_rep["lnx"], x, cfg.rms_eps)
+    B, S, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q = linear(xp_rep["attn"]["wq"], h).reshape(B, S, cfg.n_heads, hd)
+    from repro.models.layers import dot_attention
+    o = dot_attention(q, ek, ev, causal=False)
+    o = linear(xp_rep["attn"]["wo"], o.reshape(B, S, cfg.n_heads * hd))
+    return x + o
+
+
+def encode(params: Params, audio_embed: jnp.ndarray, cfg: ModelConfig):
+    """Whisper-style encoder over stubbed frame embeddings (B, F, d)."""
+    x = audio_embed + _sinusoid(audio_embed.shape[1], cfg.d_model,
+                                audio_embed.dtype)[None]
+    enc = params["encoder"]
+
+    def body(x, p_rep):
+        x, _, _ = apply_block(p_rep, x, cfg=cfg, kind="attn", cos=None,
+                              sin=None, cache=None, causal=False)
+        return x, None
+
+    x, _ = lax.scan(body, x, enc["blocks"])
+    return apply_norm(enc["norm"], x, cfg.rms_eps)
+
+
+def _encoder_kv(params: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    """Precompute stacked per-layer cross K/V from encoder output."""
+    hd = cfg.resolved_head_dim
+    B, F, _ = enc_out.shape
+
+    def kv(xp):
+        k = linear(xp["attn"]["wk"], enc_out).reshape(B, F, cfg.n_kv_heads, hd)
+        v = linear(xp["attn"]["wv"], enc_out).reshape(B, F, cfg.n_kv_heads, hd)
+        return k, v
+
+    return jax.vmap(kv)(params["xattn"])  # (L, B, F, Hkv, hd) x2
+
+
+def apply_lm(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+             positions: Optional[jnp.ndarray] = None,
+             mrope_pos: Optional[jnp.ndarray] = None,
+             vision_embed: Optional[jnp.ndarray] = None,
+             audio_embed: Optional[jnp.ndarray] = None,
+             enc_kv: Optional[Tuple] = None,
+             caches=None, pos_offset: int | jnp.ndarray = 0,
+             window_override: int = -1,
+             return_hidden: bool = False):
+    """Forward pass. tokens (B, S). Returns (logits|hidden, new_caches, aux).
+
+    decode: pass ``caches`` (from init_cache / previous step) and
+    ``pos_offset`` = current sequence index.
+    """
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    if cfg.family == "vlm" and vision_embed is not None \
+            and S >= vision_embed.shape[1]:
+        # prefill: patch embeddings occupy the first n_vision_tokens slots
+        # (decode steps carry no image tokens)
+        x = lax.dynamic_update_slice_in_dim(
+            x, vision_embed.astype(x.dtype), 0, axis=1)
+    if positions is None:
+        positions = jnp.arange(S)[None] + pos_offset          # (1, S)
+        positions = jnp.broadcast_to(positions, (B, S))
+    cos, sin = _cos_sin(cfg, positions, mrope_pos)
+    if cfg.family == "encdec" and cfg.rope_theta <= 0:
+        # sinusoidal absolute positions for the whisper-style decoder
+        # (learned in the original; shape-equivalent stub). Table capped at
+        # 32k+8 — whisper skips long_500k (see DESIGN.md §5).
+        pos_table = _sinusoid(32_776, cfg.d_model, jnp.float32)
+        x = x + jnp.take(pos_table, positions, axis=0).astype(x.dtype)
+
+    xattn = None
+    if cfg.family == "encdec":
+        if enc_kv is None:
+            assert audio_embed is not None, "encdec needs audio_embed or enc_kv"
+            enc_out = encode(params, audio_embed, cfg)
+            enc_kv = _encoder_kv(params, enc_out, cfg)
+        xattn = (params["xattn"], enc_kv)
+
+    x, new_caches, aux = _run_segments(
+        params, x, cfg=cfg, cos=cos, sin=sin, caches=caches,
+        window_override=window_override, xattn=xattn)
+    x = apply_norm(params["final_norm"], x, cfg.rms_eps)
+    if return_hidden:
+        return x, new_caches, aux
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = linear(params["head"], x)
+    return logits, new_caches, aux

@@ -1,0 +1,123 @@
+"""Pure-pytree optimizers (paper §IV-E: SGD, momentum, Adagrad, Adam)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]                    # params -> state
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (g, state, p) -> (p', state')
+    name: str
+
+
+def _tree_zeros(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), n
+
+
+def make_optimizer(name: str, lr: float, *, momentum: float = 0.9,
+                   b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                   weight_decay: float = 0.0,
+                   grad_clip: float = 0.0,
+                   state_dtype=jnp.float32) -> Optimizer:
+    name = name.lower()
+
+    def maybe_clip(grads):
+        if grad_clip > 0:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        return grads
+
+    def apply_wd(g, p):
+        if weight_decay:
+            return g + weight_decay * p.astype(g.dtype)
+        return g
+
+    if name == "sgd":
+        def init(params):
+            return {}
+
+        def update(grads, state, params):
+            grads = maybe_clip(grads)
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * apply_wd(g.astype(jnp.float32), p)
+                              ).astype(p.dtype), params, grads)
+            return new_p, state
+
+    elif name in ("momentum", "sgdm"):
+        def init(params):
+            return {"m": _tree_zeros(params, state_dtype)}
+
+        def update(grads, state, params):
+            grads = maybe_clip(grads)
+            m = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(state_dtype),
+                state["m"], grads)
+            new_p = jax.tree.map(
+                lambda p, mm: (p.astype(jnp.float32)
+                               - lr * apply_wd(mm, p)).astype(p.dtype),
+                params, m)
+            return new_p, {"m": m}
+
+    elif name == "adagrad":
+        def init(params):
+            return {"s": _tree_zeros(params, state_dtype)}
+
+        def update(grads, state, params):
+            grads = maybe_clip(grads)
+            s = jax.tree.map(
+                lambda s, g: s + jnp.square(g.astype(state_dtype)),
+                state["s"], grads)
+            new_p = jax.tree.map(
+                lambda p, g, ss: (p.astype(jnp.float32) - lr * apply_wd(
+                    g.astype(jnp.float32), p) / (jnp.sqrt(ss) + eps)
+                ).astype(p.dtype), params, grads, s)
+            return new_p, {"s": s}
+
+    elif name == "adam":
+        def init(params):
+            return {"m": _tree_zeros(params, state_dtype),
+                    "v": _tree_zeros(params, state_dtype),
+                    "t": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params):
+            grads = maybe_clip(grads)
+            t = state["t"] + 1
+            m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(state_dtype),
+                             state["m"], grads)
+            v = jax.tree.map(
+                lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(state_dtype)),
+                state["v"], grads)
+            bc1 = 1 - b1 ** t.astype(jnp.float32)
+            bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+            def upd(p, mm, vv):
+                step = lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+                if weight_decay:
+                    step = step + lr * weight_decay * p.astype(state_dtype)
+                return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+            new_p = jax.tree.map(upd, params, m, v)
+            return new_p, {"m": m, "v": v, "t": t}
+
+    else:
+        raise ValueError(f"unknown optimizer {name!r}")
+
+    return Optimizer(init=init, update=update, name=name)

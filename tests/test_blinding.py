@@ -1,0 +1,103 @@
+"""Blinding-factor invariants (paper §IV-B, Eq. 4-6 + security analysis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, blinding
+
+
+def test_dh_shared_key_symmetric():
+    a = blinding.keygen(_test_seed=1)
+    b = blinding.keygen(_test_seed=2)
+    assert blinding.shared_key(a.sk, b.pk) == blinding.shared_key(b.sk, a.pk)
+
+
+def test_dh_distinct_pairs_distinct_keys():
+    ks = [blinding.keygen(_test_seed=i) for i in range(4)]
+    cks = {blinding.shared_key(ks[i].sk, ks[j].pk)
+           for i in range(4) for j in range(4) if i != j}
+    assert len(cks) == 6  # one per unordered pair
+
+
+def test_public_key_in_group():
+    kp = blinding.keygen(_test_seed=3)
+    assert 1 < kp.pk < blinding.PRIME
+
+
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(2, 6), r=st.integers(0, 5),
+       n=st.integers(1, 8), d=st.integers(1, 16))
+def test_float_masks_cancel(K, r, n, d):
+    _, seeds = blinding.setup_passive_parties(K, deterministic_seed=11)
+    masks = blinding.all_party_masks(K, seeds, (n, d), r, "float")
+    resid = np.asarray(jnp.sum(masks, axis=0))
+    # fp non-associativity across >=3 parties leaves ~ulp-level residue
+    scale = np.abs(np.asarray(masks)).max() + 1e-9
+    assert np.abs(resid).max() / scale < 1e-5
+    if K == 2:
+        assert np.all(resid == 0.0)  # pairwise cancellation is bit-exact
+
+
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(2, 6), r=st.integers(0, 5), n=st.integers(1, 8))
+def test_int32_masks_cancel_exactly(K, r, n):
+    _, seeds = blinding.setup_passive_parties(K, deterministic_seed=13)
+    masks = blinding.all_party_masks(K, seeds, (n, 4), r, "int32")
+    assert np.all(np.asarray(jnp.sum(masks, axis=0)) == 0)
+
+
+def test_scalar_masks_cancel():
+    """Paper-literal Eq. 5: one scalar blinding factor per party."""
+    _, seeds = blinding.setup_passive_parties(3, deterministic_seed=17)
+    masks = blinding.all_party_masks(3, seeds, (5, 7), 0, "float", scalar=True)
+    # each party's mask is constant across elements
+    for k in range(3):
+        assert np.unique(np.asarray(masks[k])).size == 1
+    assert np.abs(np.asarray(jnp.sum(masks, 0))).max() < 1e-5
+
+
+def test_fresh_masks_differ_across_rounds():
+    _, seeds = blinding.setup_passive_parties(2, deterministic_seed=19)
+    m0 = blinding.all_party_masks(2, seeds, (4, 4), 0, "float")
+    m1 = blinding.all_party_masks(2, seeds, (4, 4), 1, "float")
+    assert not np.allclose(np.asarray(m0), np.asarray(m1))
+
+
+def test_mask_hides_embedding():
+    """A blinded embedding is statistically unrelated to the raw one
+    (sanity proxy for the security argument — exact for the int32 ring)."""
+    _, seeds = blinding.setup_passive_parties(2, deterministic_seed=23)
+    E = jnp.ones((1024,))
+    masks = blinding.all_party_masks(2, seeds, (1024,), 0, "float")
+    blinded = np.asarray(E + masks[0])
+    corr = np.corrcoef(blinded, np.asarray(masks[0]))[0, 1]
+    assert corr > 0.99  # mask dominates the signal
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(2, 5), n=st.integers(1, 6), d=st.integers(1, 8),
+       seed=st.integers(0, 100))
+def test_blinded_agg_equals_plain(K, n, d, seed):
+    _, seeds = blinding.setup_passive_parties(K, deterministic_seed=29)
+    key = jax.random.PRNGKey(seed)
+    E_all = jax.random.normal(key, (K + 1, n, d))
+    masks = blinding.all_party_masks(K, seeds, (n, d), 0, "float")
+    agg_b = aggregation.blind_and_aggregate(E_all, masks)
+    agg_p = jnp.mean(E_all, axis=0)
+    np.testing.assert_allclose(np.asarray(agg_b), np.asarray(agg_p),
+                               atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(2, 5), seed=st.integers(0, 100))
+def test_int32_agg_quantization_bound(K, seed):
+    _, seeds = blinding.setup_passive_parties(K, deterministic_seed=31)
+    key = jax.random.PRNGKey(seed)
+    E_all = jax.random.normal(key, (K + 1, 8, 16))
+    masks = blinding.all_party_masks(K, seeds, (8, 16), 0, "int32")
+    agg = aggregation.aggregate_int32(E_all, masks)
+    bound = (K + 1) / (2 * blinding.FIXED_POINT_SCALE) * 4
+    np.testing.assert_allclose(np.asarray(agg),
+                               np.asarray(jnp.mean(E_all, 0)), atol=bound)

@@ -1,0 +1,145 @@
+"""LLM-scale EASTER (the production path the dry-run lowers): training step,
+decode path, mask invariance — on reduced configs, real execution on CPU."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import EasterConfig, get_config, smoke_variant
+from repro.core.easter_lm import EasterLM, passive_cfg
+from repro.launch import steps as steps_mod
+
+
+def _system(arch="qwen2.5-3b", **ekw):
+    cfg = smoke_variant(get_config(arch))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1, **ekw)
+    return EasterLM(cfg=cfg, easter=e)
+
+
+def _batch(sys, B=2, S=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    V = sys.cfg.vocab_size
+    return {"tokens": jax.random.randint(key, (B, S), 0, V),
+            "labels": jax.random.randint(jax.random.fold_in(key, 1), (B, S),
+                                         0, V)}
+
+
+def test_party_cfgs_heterogeneous():
+    sys = _system()
+    cfgs = sys.party_cfgs
+    assert len(cfgs) == 4
+    assert cfgs[0].n_layers == sys.cfg.n_layers
+    for c in cfgs[1:]:
+        assert c.n_layers <= cfgs[0].n_layers
+    full = steps_mod.make_system(get_config("qwen2.5-3b"))
+    depths = [c.n_layers for c in full.party_cfgs]
+    assert depths[0] == 36 and all(d == 9 for d in depths[1:])
+
+
+def test_train_step_decreases_loss():
+    sys = _system()
+    params = sys.init_params(jax.random.PRNGKey(0))
+    train_step, opt = steps_mod.build_train_step(sys, "adam", lr=3e-3)
+    opt_state = opt.init(params)
+    batch = _batch(sys)
+    step = jax.jit(train_step)
+    losses = []
+    for i in range(12):
+        params, opt_state, m = step(params, opt_state, batch,
+                                    jnp.asarray(i, jnp.int32))
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+        assert m["per_party"].shape == (4,)
+    assert losses[-1] < losses[0]
+
+
+def test_loss_invariant_to_blinding():
+    sys = _system()
+    params = sys.init_params(jax.random.PRNGKey(1))
+    batch = _batch(sys)
+    seeds = sys.mask_seeds()
+    l_blind, per_b = sys.loss_fn(params, batch, 0, seeds)
+    l_plain, per_p = sys.loss_fn(params, batch, 0, None)
+    np.testing.assert_allclose(float(l_blind), float(l_plain), rtol=1e-4)
+
+
+def test_serve_step_matches_traintime_forward():
+    """Decode with caches reproduces the aggregated-embedding logits of the
+    full forward at the last position."""
+    sys = _system()
+    params = sys.init_params(jax.random.PRNGKey(2))
+    B, S = 2, 16
+    batch = _batch(sys, B, S)
+    toks = batch["tokens"]
+    # full forward logits of the active party from the aggregated embedding
+    Es = []
+    for k, pcfg in enumerate(sys.party_cfgs):
+        E_k, _, _ = sys.local_embed(params["parties"][k], pcfg, toks)
+        Es.append(E_k)
+    E = jnp.mean(jnp.stack(Es), axis=0)
+    want = sys.decide(params["parties"][0], sys.party_cfgs[0], E)[:, -1]
+
+    caches = sys.init_caches(B, S)
+    _, caches = sys.prefill(params, toks[:, :S - 1], caches)
+    logits, caches = sys.serve_step(params, toks[:, S - 1:], caches,
+                                    jnp.asarray(S - 1, jnp.int32), None)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(want),
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "recurrentgemma-9b",
+                                  "qwen3-moe-235b-a22b"])
+def test_serve_step_nondense_families(arch):
+    sys = _system(arch)
+    params = sys.init_params(jax.random.PRNGKey(3))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0,
+                              sys.cfg.vocab_size)
+    caches = sys.init_caches(B, S)
+    _, caches = sys.prefill(params, toks[:, :S - 1], caches)
+    logits, caches = sys.serve_step(params, toks[:, S - 1:], caches,
+                                    jnp.asarray(S - 1, jnp.int32), None)
+    assert logits.shape == (B, 1, sys.cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_int32_mode_close_to_float():
+    sys_f = _system()
+    sys_i = _system(mask_mode="int32")
+    params = sys_f.init_params(jax.random.PRNGKey(5))
+    batch = _batch(sys_f)
+    lf, _ = sys_f.loss_fn(params, batch, 0, sys_f.mask_seeds())
+    li, _ = sys_i.loss_fn(params, batch, 0, sys_i.mask_seeds())
+    assert abs(float(lf) - float(li)) < 0.05
+
+
+def test_passive_cfg_hybrid_pattern_aligned():
+    cfg = get_config("recurrentgemma-9b")
+    e = EasterConfig(num_passive=3)
+    p = passive_cfg(cfg, e, 1)
+    assert p.n_layers % len(cfg.hybrid.pattern) == 0
+
+
+def test_kv_quant_decode_close():
+    """int8 KV cache (§Perf H2-it3): decode logits within tolerance of the
+    bf16 cache path."""
+    import dataclasses
+    from repro.models import build
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    key = jax.random.PRNGKey(0)
+    fns, fnsq = build(cfg), build(cfgq)
+    params = fns.init(key)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _, _ = fns.apply(params, toks)
+    caches = fnsq.init_cache(B, S)
+    _, caches, _ = fnsq.apply(params, toks[:, :S - 4], caches=caches)
+    for i in range(S - 4, S):
+        dec, caches, _ = fnsq.apply(params, toks[:, i:i + 1], caches=caches,
+                                    pos_offset=i)
+    err = float(jnp.max(jnp.abs(full[:, -1] - dec[:, 0])))
+    rel = err / float(jnp.max(jnp.abs(full[:, -1])))
+    assert rel < 0.01, (err, rel)

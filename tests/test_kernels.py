@@ -1,0 +1,106 @@
+"""Per-kernel allclose sweeps vs the ref.py pure-jnp oracles (interpret
+mode on CPU), over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.blind_agg import blind_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rg_lru import rglru_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dt):
+    return 3e-2 if dt == jnp.bfloat16 else 3e-5
+
+
+@pytest.mark.parametrize("S,Hq,Hkv,hd", [
+    (128, 4, 4, 64), (128, 4, 2, 64), (256, 8, 1, 64),
+    (128, 4, 2, 128), (64, 2, 2, 32),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, Hq, Hkv, hd, causal, window, dtype):
+    q = jax.random.normal(KEY, (2, S, Hq, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, S, Hkv, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, S, Hkv, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+def test_flash_attention_blocks_divide_unevenly_rejected():
+    q = jax.random.normal(KEY, (1, 100, 2, 32))
+    with pytest.raises(AssertionError):
+        flash_attention(q, q, q, block_q=64, block_k=64, interpret=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(1, 5), n=st.integers(1, 64), d=st.integers(1, 128),
+       seed=st.integers(0, 99))
+def test_blind_agg_sweep(K, n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    Ea = jax.random.normal(key, (n, d))
+    Ep = jax.random.normal(jax.random.fold_in(key, 1), (K, n, d))
+    M = jax.random.normal(jax.random.fold_in(key, 2), (K, n, d))
+    got = blind_agg(Ea, Ep, M, interpret=True)
+    want = ref.reference_blind_agg(Ea, Ep, M)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blind_agg_dtypes(dtype):
+    Ea = jax.random.normal(KEY, (8, 3, 32, 16), dtype)   # 4-D embedding
+    Ep = jax.random.normal(jax.random.fold_in(KEY, 3), (3, 8, 3, 32, 16),
+                           dtype)
+    M = jax.random.normal(jax.random.fold_in(KEY, 4), (3, 8, 3, 32, 16),
+                          jnp.float32).astype(dtype)
+    got = blind_agg(Ea, Ep, M, interpret=True)
+    want = ref.reference_blind_agg(Ea, Ep, M)
+    assert got.shape == Ea.shape
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("B,L,W,chunk", [
+    (2, 64, 128, 16), (1, 128, 256, 64), (4, 32, 64, 32), (3, 96, 128, 32),
+])
+def test_rglru_scan_sweep(B, L, W, chunk):
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (B, L, W)))
+    b = jax.random.normal(jax.random.fold_in(KEY, 5), (B, L, W)) * 0.1
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 6), (B, W))
+    got_h, got_last = rglru_scan(a, b, h0, chunk=chunk, interpret=True)
+    want_h, want_last = ref.reference_rglru(a, b, h0)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_last), np.asarray(want_last),
+                               atol=1e-5)
+
+
+def test_rglru_long_decay_stability():
+    """Long sequence with strong decay: kernel must not accumulate error."""
+    B, L, W = 1, 512, 64
+    a = jnp.full((B, L, W), 0.99)
+    b = jnp.ones((B, L, W)) * 0.01
+    h0 = jnp.zeros((B, W))
+    got_h, _ = rglru_scan(a, b, h0, chunk=64, interpret=True)
+    want_h, _ = ref.reference_rglru(a, b, h0)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrappers_jit():
+    """The jit'd public wrappers execute end-to-end on CPU."""
+    q = jax.random.normal(KEY, (1, 128, 4, 64))
+    o = ops.flash_attention(q, q, q, block_q=64, block_k=64)
+    assert o.shape == q.shape
+    Ea = jax.random.normal(KEY, (16, 8))
+    Ep = jax.random.normal(KEY, (2, 16, 8))
+    assert ops.blind_agg(Ea, Ep, jnp.zeros_like(Ep)).shape == Ea.shape

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+family — 2 layers, d_model <= 512, <= 4 experts — one forward + one train
+step on CPU asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs, smoke_variant
+from repro.models import build, frontend_inputs
+from repro.optim import make_optimizer
+
+ARCHS = [a for a in list_archs() if not a.startswith("easter")]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_variant(get_config(arch))
+    assert cfg.n_layers <= max(2, len(cfg.hybrid.pattern))
+    assert cfg.d_model <= 512
+    if cfg.family == "moe":
+        assert cfg.moe.n_experts <= 4
+    fns = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fns.init(key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                                cfg.vocab_size)
+    fe = frontend_inputs(cfg, B, key)
+
+    logits, _, aux = fns.apply(params, toks, **fe)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+    def loss_fn(p):
+        lg, _, aux = fns.apply(p, toks, **fe)
+        logz = jax.nn.log_softmax(lg.astype(jnp.float32))
+        ll = jnp.take_along_axis(logz, labels[..., None], -1)
+        return -jnp.mean(ll) + aux
+
+    opt = make_optimizer("adam", 1e-3)
+    state = opt.init(params)
+    l0 = float(loss_fn(params))
+    grads = jax.grad(loss_fn)(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    params2, _ = opt.update(grads, state, params)
+    l1 = float(loss_fn(params2))
+    assert np.isfinite(l1)
+    changed = any(float(jnp.max(jnp.abs(a - b))) > 0
+                  for a, b in zip(jax.tree.leaves(params),
+                                  jax.tree.leaves(params2)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma3-4b", "mamba2-2.7b",
+                                  "recurrentgemma-9b", "whisper-small",
+                                  "qwen2-vl-7b", "qwen3-moe-235b-a22b"])
+def test_smoke_decode_matches_full(arch):
+    cfg = smoke_variant(get_config(arch))
+    fns = build(cfg)
+    key = jax.random.PRNGKey(1)
+    params = fns.init(key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = frontend_inputs(cfg, B, key)
+    full, _, _ = fns.apply(params, toks, **fe)
+    caches = fns.init_cache(B, S)
+    _, caches, _ = fns.apply(params, toks[:, :S - 1], caches=caches, **fe)
+    dec, caches, _ = fns.apply(params, toks[:, S - 1:], caches=caches,
+                               pos_offset=S - 1, **fe)
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(dec[:, 0]),
+                               atol=2e-3)
+
+
+def test_full_configs_match_assignment():
+    """The registered full configs carry the exact assigned hyperparams."""
+    spec = {
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+    }
+    for arch, (L, d, H, KV, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == H, arch
+        assert cfg.n_kv_heads == KV, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == V, arch
+    assert get_config("qwen3-moe-235b-a22b").moe.n_experts == 128
+    assert get_config("qwen3-moe-235b-a22b").moe.top_k == 8
+    assert get_config("qwen2-moe-a2.7b").moe.n_experts == 60
+    assert get_config("qwen2-moe-a2.7b").moe.top_k == 4
+    assert get_config("qwen2-moe-a2.7b").moe.n_shared_experts == 4
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+    assert get_config("gemma3-4b").swa_pattern == (5, 1)
+    assert get_config("qwen2-vl-7b").mrope_sections == (16, 24, 24)
+    assert get_config("whisper-small").n_encoder_layers == 12

@@ -1,0 +1,146 @@
+"""End-to-end behaviour tests for the EASTER system (paper Alg. 1 +
+qualitative claims of §V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import EasterConfig
+from repro.core.baselines import AggVFL, LocalOnly, SplitVFL, make_train_step
+from repro.core.party_models import PartyArch, hetero_zoo
+from repro.core.protocol import EasterClassifier
+from repro.data import make_dataset, vertical_partition
+from repro.data.pipeline import batch_iterator
+
+
+def _train(method, params, ds, C, steps=80, lr=1e-3, batch=64, masks_fn=None):
+    init_opt, step = make_train_step(method, "adam", lr)
+    opt_state = init_opt(params)
+    it = batch_iterator(ds.x_train, ds.y_train, batch, seed=0)
+    for i in range(steps):
+        xb, yb = next(it)
+        xs = [jnp.asarray(v) for v in vertical_partition(xb, C, ds.image_hw)]
+        m = masks_fn(batch, i) if masks_fn else None
+        params, opt_state, total, per = step(params, opt_state, xs,
+                                             jnp.asarray(yb), m)
+    xs_te = [jnp.asarray(v) for v in vertical_partition(ds.x_test, C, ds.image_hw)]
+    return params, np.asarray(method.accuracy(params, xs_te,
+                                              jnp.asarray(ds.y_test)))
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("mnist_like", n_train=2048, n_test=512, seed=0)
+
+
+def _mlp_arches(C, n_cls, d_embed=64):
+    # heterogeneous MLP widths (the paper's hetero setting, flat features)
+    widths = [(128, 64), (256, 128), (64, 32), (96, 64)]
+    return [PartyArch("mlp", widths[k % 4], (64,), d_embed, n_cls)
+            for k in range(C)]
+
+
+def test_easter_end_to_end_beats_local(ds):
+    C = 4
+    nf = [v.shape[-1] for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    arches = _mlp_arches(C, ds.n_classes)
+    easter = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                              arches, nf)
+    p = easter.init_params(jax.random.PRNGKey(0))
+    _, acc_e = _train(easter, p, ds, C, masks_fn=easter.masks)
+
+    local = LocalOnly(arches, nf)
+    p = local.init_params(jax.random.PRNGKey(0))
+    _, acc_l = _train(local, p, ds, C)
+
+    # paper Table II: EASTER >> Local (full features vs 1/C of features)
+    assert acc_e.mean() > acc_l.mean() + 0.02, (acc_e, acc_l)
+    assert acc_e.mean() > 0.5
+
+
+def test_easter_all_parties_converge(ds):
+    """Multiple heterogeneous models optimized in ONE training run (paper's
+    Multiple Models Training design goal)."""
+    C = 4
+    nf = [v.shape[-1] for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    easter = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                              _mlp_arches(C, ds.n_classes), nf)
+    p = easter.init_params(jax.random.PRNGKey(1))
+    _, acc = _train(easter, p, ds, C, masks_fn=easter.masks)
+    assert (acc > 0.5).all(), acc  # every party's theta_k is usable
+
+
+def test_blinding_costs_no_accuracy(ds):
+    C = 4
+    nf = [v.shape[-1] for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    arches = _mlp_arches(C, ds.n_classes)
+    e1 = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                          arches, nf)
+    p0 = e1.init_params(jax.random.PRNGKey(2))
+    _, acc_blind = _train(e1, p0, ds, C, masks_fn=e1.masks)
+    p0 = e1.init_params(jax.random.PRNGKey(2))
+    _, acc_plain = _train(e1, p0, ds, C, masks_fn=None)
+    assert abs(acc_blind.mean() - acc_plain.mean()) < 0.05
+
+
+def test_baselines_rank_order(ds):
+    """Qualitative Table II orderings on the synthetic stand-in.
+
+    Under a vertical split where each party's slice only identifies the
+    class up to aliasing, the paper's central claim is sharpest: EASTER's
+    per-party models see the *global* embedding and break the alias, while
+    AggVFL's per-party models (trained/evaluated on their own features
+    only) stay capped — exactly the Table II gap."""
+    C = 4
+    nf = [v.shape[-1] for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    arches = _mlp_arches(C, ds.n_classes)
+
+    res = {}
+    easter = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                              arches, nf)
+    p = easter.init_params(jax.random.PRNGKey(3))
+    res["easter"] = _train(easter, p, ds, C, masks_fn=easter.masks)[1].mean()
+    agg = AggVFL(arches, nf)
+    p_agg, acc_agg = None, None
+    for name, m in [("split", SplitVFL(arches, nf, ds.n_classes)),
+                    ("agg", agg),
+                    ("local", LocalOnly(arches, nf))]:
+        p = m.init_params(jax.random.PRNGKey(3))
+        p_tr, acc = _train(m, p, ds, C)
+        res[name] = acc.mean()
+        if name == "agg":
+            p_agg = p_tr
+    assert res["easter"] > res["local"]
+    assert res["split"] > res["local"]
+    # EASTER per-party models beat AggVFL per-party models (the +7.22% claim)
+    assert res["easter"] > res["agg"] + 0.05, res
+    # ...although AggVFL's *aggregated* prediction is collaborative and fine
+    xs_te = [jnp.asarray(v)
+             for v in vertical_partition(ds.x_test, C, ds.image_hw)]
+    agg_acc = float(agg.aggregate_accuracy(p_agg, xs_te,
+                                           jnp.asarray(ds.y_test)))
+    assert agg_acc > res["local"]
+
+
+def test_cvfl_compression_reduces_bytes():
+    arches = _mlp_arches(4, 10)
+    nf = [8, 8, 8, 8]
+    full = SplitVFL(arches, nf, 10)
+    comp = SplitVFL(arches, nf, 10, compress_frac=0.25)
+    assert comp.bytes_per_round(128) < full.bytes_per_round(128)
+
+
+def test_compressed_easter_ablation(ds):
+    """Beyond-paper: C_VFL-style top-k compression of EASTER's uplink
+    embeddings — wire bytes drop ~2x at 25% keep with modest accuracy cost."""
+    C = 4
+    nf = [v.shape[-1] for v in vertical_partition(ds.x_train[:1], C, ds.image_hw)]
+    arches = _mlp_arches(C, ds.n_classes)
+    full = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                            arches, nf)
+    comp = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=64),
+                            arches, nf, compress_frac=0.25)
+    assert comp.bytes_per_round(128) < full.bytes_per_round(128)
+    p = comp.init_params(jax.random.PRNGKey(5))
+    _, acc = _train(comp, p, ds, C, masks_fn=comp.masks)
+    assert acc.mean() > 0.8  # compression costs little on this task
