@@ -1,0 +1,139 @@
+"""Many-party scaling: protocol round time vs C for the party engines.
+
+The paper stops at C = 4; the vectorized party engine (core/party_engine.py)
+exists to push the same protocol to C = 128+. This benchmark sweeps
+C in {4, 16, 64, 128} and times one jitted EASTER training round
+(embed -> blind -> aggregate -> decide -> per-party grads -> update) on
+synthetic vertically-split features, comparing:
+
+  * engine=vectorized — grouped-vmap engine (O(#groups) XLA ops)
+  * engine=loop       — the seed's per-party Python loop (O(C) ops);
+                        skipped above --loop-max-c (trace time explodes)
+  * --use-kernel      — fused Pallas blind_agg aggregation (K-tiled,
+                        custom VJP) instead of the jnp reference
+
+Usage:
+    PYTHONPATH=src python benchmarks/many_party_scaling.py          # full
+    PYTHONPATH=src python benchmarks/many_party_scaling.py --smoke  # C=64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EasterConfig
+from repro.core.party_models import PartyArch
+from repro.core.protocol import EasterClassifier, split_features
+
+
+def mlp_zoo(C: int, n_cls: int, d_embed: int) -> list:
+    """Heterogeneous-but-groupable zoo: 4 distinct MLP shapes, cycled."""
+    widths = [(64, 32), (32, 16), (96, 48), (48, 24)]
+    return [PartyArch("mlp", widths[k % 4], (widths[k % 4][-1],), d_embed,
+                      n_cls) for k in range(C)]
+
+
+def build(C: int, n_feat_total: int, d_embed: int, n_cls: int,
+          engine: str, use_kernel: bool, mask_mode: str) -> tuple:
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n_feat_total))
+    nf = [v.shape[-1] for v in split_features(x, C)]
+    arches = mlp_zoo(C, n_cls, d_embed)
+    e = EasterConfig(num_passive=C - 1, d_embed=d_embed,
+                     mask_mode=mask_mode)
+    sys = EasterClassifier(e, arches, nf, engine=engine,
+                           use_kernel=use_kernel)
+    return sys, nf
+
+
+def time_rounds(sys, nf, batch: int, rounds: int, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    params = sys.init_params(key)
+    init_opt, step = sys.make_train_step("adam", 1e-3)
+    opt_state = init_opt(params)
+    xs = [jax.random.normal(jax.random.fold_in(key, k), (batch, nf[k]))
+          for k in range(sys.C)]
+    y = jax.random.randint(jax.random.fold_in(key, 999), (batch,), 0,
+                           sys.arches[0].n_classes)
+    masks = sys.masks(batch, 0)
+    t_trace = time.perf_counter()
+    out = step(params, opt_state, xs, y, masks)       # compile + warmup
+    jax.block_until_ready(out[2])
+    trace_s = time.perf_counter() - t_trace
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        params, opt_state, total, per = step(params, opt_state, xs, y, masks)
+    jax.block_until_ready(total)
+    dt = (time.perf_counter() - t0) / rounds
+    return {"round_ms": dt * 1e3, "compile_s": trace_s,
+            "rounds_per_s": 1.0 / dt, "loss": float(total),
+            "n_groups": sys._eng.n_groups}
+
+
+def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
+        mask_mode, loop_max_c, save=None):
+    rows = []
+    for C in cs:
+        for eng in engines:
+            if eng == "loop" and C > loop_max_c:
+                print(f"many_party C={C} engine=loop skipped "
+                      f"(> --loop-max-c {loop_max_c})")
+                continue
+            sys, nf = build(C, n_feat_total, d_embed, 10, eng, use_kernel,
+                            mask_mode)
+            r = time_rounds(sys, nf, batch, rounds)
+            r.update({"C": C, "engine": eng, "batch": batch,
+                      "use_kernel": use_kernel})
+            rows.append(r)
+            print(f"many_party C={C:4d} engine={eng:10s} "
+                  f"groups={r['n_groups']:2d} "
+                  f"round {r['round_ms']:8.2f} ms  "
+                  f"compile {r['compile_s']:6.1f} s  "
+                  f"loss {r['loss']:.3f}")
+    if save:
+        os.makedirs(os.path.dirname(save) or ".", exist_ok=True)
+        with open(save, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"saved -> {save}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cs", default="4,16,64,128",
+                    help="comma-separated party counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="C=64 only, reduced shapes (CI-runnable)")
+    ap.add_argument("--engine", default="both",
+                    choices=["both", "vectorized", "loop"])
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--d-embed", type=int, default=64)
+    ap.add_argument("--n-features", type=int, default=1024)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fused Pallas blind_agg (interpret mode off-TPU)")
+    ap.add_argument("--mask-mode", default="float",
+                    choices=["float", "int32"])
+    ap.add_argument("--loop-max-c", type=int, default=16,
+                    help="skip the loop engine above this C")
+    ap.add_argument("--save", default="experiments/bench/many_party.json")
+    a = ap.parse_args()
+    if a.smoke:
+        cs, engines = [64], ["vectorized"]
+        a.batch, a.rounds, a.n_features = 32, 5, 256
+    else:
+        cs = [int(c) for c in a.cs.split(",")]
+        engines = (["vectorized", "loop"] if a.engine == "both"
+                   else [a.engine])
+    run(cs, engines, a.batch, a.rounds, a.d_embed, a.n_features,
+        a.use_kernel, a.mask_mode, a.loop_max_c,
+        save=None if a.smoke else a.save)
+
+
+if __name__ == "__main__":
+    main()

@@ -63,6 +63,11 @@ class EasterLM:
     cfg: ModelConfig                 # active party's architecture
     easter: EasterConfig
     grad_mode: str = "easter"        # easter (paper) | joint (beyond-paper)
+    # vectorized: the K passive proxies share one config (see passive_cfg),
+    # so their params stack and the whole passive side runs under ONE
+    # jax.vmap (core/party_engine.py idea at LLM scale) instead of a K-way
+    # Python loop. loop: the seed's per-party path (equivalence oracle).
+    engine: str = "vectorized"
 
     @property
     def party_cfgs(self) -> List[ModelConfig]:
@@ -141,18 +146,20 @@ class EasterLM:
                     + E_all[k] / self.C)
         return E
 
-    # -- training forward/loss ----------------------------------------------
-    def loss_fn(self, params, batch, round_idx, seeds):
-        tokens, labels = batch["tokens"], batch["labels"]
-        fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
-        Es, auxes = [], []
-        for k, pcfg in enumerate(self.party_cfgs):
-            E_k, _, aux_k = self.local_embed(params["parties"][k], pcfg,
-                                             tokens, **fe)
-            Es.append(E_k)
-            auxes.append(aux_k)
+    def _passive_group_ok(self) -> bool:
+        """True when parties 1..K are structurally identical (they are by
+        construction of passive_cfg — only the name differs) and the
+        vectorized engine is selected."""
+        if self.engine != "vectorized" or self.easter.num_passive < 1:
+            return False
+        anon = [dataclasses.replace(c, name="") for c in self.party_cfgs[1:]]
+        return all(c == anon[0] for c in anon)
+
+    def _aggregate(self, E_all, round_idx, seeds):
+        """Shared blind+aggregate step of both engines: sharding-constrained
+        (C, B, S, d) -> constrained global E. Keep BOTH loss paths on this
+        helper — they are each other's equivalence oracle."""
         from repro import sharding as shard_hints
-        E_all = jnp.stack(Es)                           # (C, B, S, d_e)
         E_all = shard_hints.constrain(E_all, (None, "batch", None, None))
         masks = self.masks_for(E_all.shape[1:], round_idx, seeds)
         if masks is not None:
@@ -162,6 +169,21 @@ class EasterLM:
         else:
             E = aggregation.blind_and_aggregate(E_all, masks)
         E = shard_hints.constrain(E, ("batch", None, None))
+        return E_all, E
+
+    # -- training forward/loss ----------------------------------------------
+    def loss_fn(self, params, batch, round_idx, seeds):
+        if self._passive_group_ok():
+            return self._loss_fn_vectorized(params, batch, round_idx, seeds)
+        tokens, labels = batch["tokens"], batch["labels"]
+        fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
+        Es, auxes = [], []
+        for k, pcfg in enumerate(self.party_cfgs):
+            E_k, _, aux_k = self.local_embed(params["parties"][k], pcfg,
+                                             tokens, **fe)
+            Es.append(E_k)
+            auxes.append(aux_k)
+        E_all, E = self._aggregate(jnp.stack(Es), round_idx, seeds)
         per = []
         for k, pcfg in enumerate(self.party_cfgs):
             h_k = self.decide_hidden(params["parties"][k], pcfg,
@@ -172,6 +194,49 @@ class EasterLM:
                 h_k, params["parties"][k]["head"]["w"], labels))
         total = jnp.sum(jnp.stack(per)) + jnp.sum(jnp.stack(auxes))
         return total, jnp.stack(per)
+
+    def _loss_fn_vectorized(self, params, batch, round_idx, seeds):
+        """One vmap over the stacked passive group instead of a K-way loop.
+
+        Grad semantics are identical to the loop path: the stop-gradient
+        surrogate is applied to the stacked (C, B, S, d) per-party view, so
+        ONE jax.grad still yields every party's own-loss-only gradient.
+        """
+        from repro.core.party_engine import stack_trees
+
+        tokens, labels = batch["tokens"], batch["labels"]
+        fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
+        pcfg_a, pcfg_p = self.party_cfgs[0], self.party_cfgs[1]
+        E_a, _, aux_a = self.local_embed(params["parties"][0], pcfg_a,
+                                         tokens, **fe)
+        stacked = stack_trees(params["parties"][1:])
+
+        def embed_one(pp):
+            E_k, _, aux_k = self.local_embed(pp, pcfg_p, tokens, **fe)
+            return E_k, aux_k
+
+        E_p, aux_p = jax.vmap(embed_one)(stacked)       # (K, B, S, d_e)
+        E_all, E = self._aggregate(
+            jnp.concatenate([E_a[None], E_p], axis=0), round_idx, seeds)
+        E = E.astype(E_all.dtype)
+        if self.grad_mode == "easter":
+            E_for = (jax.lax.stop_gradient(E)[None]
+                     - jax.lax.stop_gradient(E_all) / self.C
+                     + E_all / self.C)                   # (C, B, S, d_e)
+        else:
+            E_for = jnp.broadcast_to(E[None], E_all.shape)
+        h_a = self.decide_hidden(params["parties"][0], pcfg_a, E_for[0])
+        per_a = chunked_lm_head_xent(
+            h_a, params["parties"][0]["head"]["w"], labels)
+
+        def decide_one(pp, e_k):
+            h_k = self.decide_hidden(pp, pcfg_p, e_k)
+            return chunked_lm_head_xent(h_k, pp["head"]["w"], labels)
+
+        per_p = jax.vmap(decide_one)(stacked, E_for[1:])
+        per = jnp.concatenate([per_a[None], per_p])
+        total = jnp.sum(per) + aux_a + jnp.sum(aux_p)
+        return total, per
 
     # -- serving -------------------------------------------------------------
     def init_caches(self, batch: int, cache_len: int,

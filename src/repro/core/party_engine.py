@@ -1,0 +1,154 @@
+"""Vectorized many-party execution engine.
+
+The paper runs C = 4 parties, and the seed implementation looped over them
+in Python (`for k in range(C)`), which builds C separate XLA subgraphs and
+caps the reproduction at a handful of participants. This module groups
+parties by *execution signature* — ``(PartyArch, n_features)``; parties with
+the same signature have identical param pytree shapes — stacks each group's
+params along a leading axis, and runs embed/decide/vjp steps with one
+``jax.vmap`` per group. With C=128 near-equal vertical slices there are at
+most ``2 x len(distinct arches)`` groups (slice widths differ by at most 1),
+so the protocol round is O(#groups) XLA ops instead of O(C).
+
+Party order is preserved end-to-end: group outputs are concatenated and
+re-scattered through a precomputed permutation so ``(C, B, ...)`` results
+are bit-identical in layout to the loop engine's ``jnp.stack`` of per-party
+results. The grouping is an *execution strategy only* — params stay a plain
+per-party list (the federation's trust boundaries), and grads come back as
+a per-party list.
+
+Used by ``core/protocol.py`` (paper scale) and ``core/easter_lm.py`` (LLM
+scale, where the K passive proxies share one config and form one group).
+Equivalence with the loop engine is proven in tests/test_protocol_grads.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.party_models import PartyArch, decide_fn, embed_fn
+
+
+def group_by(keys: Sequence[Any]) -> List[Tuple[Any, Tuple[int, ...]]]:
+    """Stable grouping: (key, member indices) in first-seen key order."""
+    groups: Dict[Any, List[int]] = {}
+    for i, k in enumerate(keys):
+        groups.setdefault(k, []).append(i)
+    return [(k, tuple(v)) for k, v in groups.items()]
+
+
+def stack_trees(trees: Sequence[Any]):
+    """Stack a list of identically-shaped pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, n: int) -> List[Any]:
+    """Inverse of stack_trees: split the leading axis back into a list."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+class PartyEngine:
+    """Grouped-vmap executor for C heterogeneous paper-scale parties."""
+
+    def __init__(self, arches: Sequence[PartyArch],
+                 n_features: Sequence[int]):
+        assert len(arches) == len(n_features)
+        self.C = len(arches)
+        self.arches = list(arches)
+        self.n_features = list(n_features)
+        assert len({a.d_embed for a in arches}) == 1, "d_embed must be shared"
+        assert len({a.n_classes for a in arches}) == 1, "labels are shared"
+        self.groups = group_by(list(zip(self.arches, self.n_features)))
+        order = [i for _, idx in self.groups for i in idx]
+        inv = [0] * self.C
+        for pos, i in enumerate(order):
+            inv[i] = pos
+        # concat-of-groups index for party i (host-side constant)
+        self._perm = jnp.asarray(inv, jnp.int32)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    # -- helpers -----------------------------------------------------------
+    def _scatter(self, group_outs: List[jnp.ndarray]) -> jnp.ndarray:
+        """Concat per-group (G_i, B, ...) results -> (C, B, ...) party order."""
+        return jnp.concatenate(group_outs, axis=0)[self._perm]
+
+    def _gather(self, x_per_party: jnp.ndarray, idx) -> jnp.ndarray:
+        """(C, B, ...) -> this group's (G, B, ...) slab."""
+        return x_per_party[jnp.asarray(idx, jnp.int32)]
+
+    # -- forward -----------------------------------------------------------
+    def embed_all(self, params: Sequence[dict], xs: Sequence[jnp.ndarray]
+                  ) -> jnp.ndarray:
+        """E_k = h(theta_k, D_k) for all parties -> (C, B, d_embed)."""
+        outs = []
+        for (arch, _), idx in self.groups:
+            sp = stack_trees([params[i] for i in idx])
+            sx = jnp.stack([xs[i] for i in idx])
+            outs.append(jax.vmap(
+                lambda p, x, a=arch: embed_fn(p, a, x))(sp, sx))
+        return self._scatter(outs)
+
+    def decide_all(self, params: Sequence[dict], E_per_party: jnp.ndarray
+                   ) -> jnp.ndarray:
+        """R_k = p(theta_k, E_for_k): (C, B, d) -> (C, B, n_classes)."""
+        outs = []
+        for (arch, _), idx in self.groups:
+            sp = stack_trees([params[i] for i in idx])
+            se = self._gather(E_per_party, idx)
+            outs.append(jax.vmap(
+                lambda p, e, a=arch: decide_fn(p, a, e))(sp, se))
+        return self._scatter(outs)
+
+    # -- explicit-vjp protocol path (message-passing reference) ------------
+    def embed_vjp(self, params: Sequence[dict], xs: Sequence[jnp.ndarray]):
+        """(E_all, pullback): pullback maps gE_all (C,B,d) -> per-party
+        embed-net grads (list, party order)."""
+        outs, vjps = [], []
+        for (arch, _), idx in self.groups:
+            sp = stack_trees([params[i] for i in idx])
+            sx = jnp.stack([xs[i] for i in idx])
+            Eg, vjp_g = jax.vjp(
+                lambda p, a=arch, x=sx: jax.vmap(
+                    lambda pi, xi: embed_fn(pi, a, xi))(p, x), sp)
+            outs.append(Eg)
+            vjps.append(vjp_g)
+
+        def pull(gE_all: jnp.ndarray) -> List[dict]:
+            grads: List[Any] = [None] * self.C
+            for (_, idx), vjp_g in zip(self.groups, vjps):
+                (gsp,) = vjp_g(self._gather(gE_all, idx))
+                for j, i in enumerate(idx):
+                    grads[i] = jax.tree.map(lambda x, j=j: x[j], gsp)
+            return grads
+
+        return self._scatter(outs), pull
+
+    def decide_vjp(self, params: Sequence[dict], E_per_party: jnp.ndarray):
+        """(R_all, pullback): pullback maps gR_all (C,B,n_cls) ->
+        (per-party decide-net grads list, gE_all (C,B,d))."""
+        outs, vjps = [], []
+        for (arch, _), idx in self.groups:
+            sp = stack_trees([params[i] for i in idx])
+            se = self._gather(E_per_party, idx)
+            Rg, vjp_g = jax.vjp(
+                lambda p, e, a=arch: jax.vmap(
+                    lambda pi, ei: decide_fn(pi, a, ei))(p, e), sp, se)
+            outs.append(Rg)
+            vjps.append(vjp_g)
+
+        def pull(gR_all: jnp.ndarray):
+            grads: List[Any] = [None] * self.C
+            gEs = []
+            for (_, idx), vjp_g in zip(self.groups, vjps):
+                gsp, gse = vjp_g(self._gather(gR_all, idx))
+                gEs.append(gse)
+                for j, i in enumerate(idx):
+                    grads[i] = jax.tree.map(lambda x, j=j: x[j], gsp)
+            return grads, self._scatter(gEs)
+
+        return self._scatter(outs), pull

@@ -25,6 +25,12 @@ embedding net (full cross-party gradient flow).
 ``assisted_grads`` is the message-passing reference implementation of the
 paper's active-party-assisted backward pass (explicit vjp per party), used to
 *prove* the surrogate matches the protocol (tests/test_protocol_grads.py).
+
+Execution engines: ``engine="vectorized"`` (default) groups parties by
+(arch, slice width) and runs each protocol step as one ``jax.vmap`` per
+group (core/party_engine.py) — O(#groups) XLA ops, scales to C=128+.
+``engine="loop"`` is the seed's per-party Python loop, kept as the
+equivalence oracle (tests prove the two match).
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import EasterConfig
 from repro.core import aggregation, blinding, losses, party_models
+from repro.core.party_engine import PartyEngine
 from repro.core.party_models import PartyArch, decide_fn, embed_fn, init_party
 from repro.optim import make_optimizer
 
@@ -48,6 +55,8 @@ class EasterClassifier:
     n_features: List[int]               # per-party vertical feature split
     loss: str = "ce"
     grad_mode: str = "easter"           # easter (paper) | joint (beyond)
+    engine: str = "vectorized"          # vectorized (grouped vmap) | loop
+    use_kernel: bool = False            # fused Pallas blind_agg aggregation
     # beyond-paper ablation: C_VFL-style top-k sparsification of the
     # UPLINK embeddings (values+indices wire format), straight-through
     # gradients. 0 = off (paper). Composes with blinding: masks are
@@ -56,8 +65,10 @@ class EasterClassifier:
 
     def __post_init__(self):
         assert len(self.arches) == len(self.n_features)
+        assert self.engine in ("vectorized", "loop"), self.engine
         self.C = len(self.arches)
         self.K = self.C - 1
+        self._eng = PartyEngine(self.arches, self.n_features)
         if self.K > 1:
             self.keys, self.seeds = blinding.setup_passive_parties(
                 self.K, deterministic_seed=7)
@@ -81,31 +92,44 @@ class EasterClassifier:
 
     def local_embeds(self, params, xs) -> jnp.ndarray:
         """(C, B, d_embed) local embeddings, party order."""
-        Es = [embed_fn(params[k], self.arches[k], xs[k])
-              for k in range(self.C)]
+        if self.engine == "vectorized":
+            E_all = self._eng.embed_all(params, xs)
+        else:
+            E_all = jnp.stack([embed_fn(params[k], self.arches[k], xs[k])
+                               for k in range(self.C)])
         if self.compress_frac > 0:
             from repro.core.baselines import _topk_sparsify
             # passive parties compress their uplink (active stays local)
-            Es = [Es[0]] + [_topk_sparsify(e, self.compress_frac)
-                            for e in Es[1:]]
-        return jnp.stack(Es)
+            E_all = jnp.concatenate(
+                [E_all[:1], _topk_sparsify(E_all[1:], self.compress_frac)], 0)
+        return E_all
 
     def global_embed(self, E_all: jnp.ndarray, masks) -> jnp.ndarray:
         if masks is not None and self.easter.mask_mode == "int32":
             return aggregation.aggregate_int32(E_all, masks)
-        return aggregation.blind_and_aggregate(E_all, masks)
+        return aggregation.blind_and_aggregate(E_all, masks,
+                                               use_kernel=self.use_kernel)
+
+    def _per_party_E(self, E: jnp.ndarray, E_all) -> jnp.ndarray:
+        """(C, B, d): the per-party view E_for_k of the global embedding."""
+        if self.grad_mode == "easter" and E_all is not None:
+            return (jax.lax.stop_gradient(E)[None]
+                    - jax.lax.stop_gradient(E_all) / self.C
+                    + E_all / self.C)
+        return jnp.broadcast_to(E[None], (self.C,) + E.shape)
+
+    def _predictions_stacked(self, params, E, E_all=None) -> jnp.ndarray:
+        """(C, B, n_classes) logits, party order."""
+        E_for = self._per_party_E(E, E_all)
+        if self.engine == "vectorized":
+            return self._eng.decide_all(params, E_for)
+        return jnp.stack([decide_fn(params[k], self.arches[k], E_for[k])
+                          for k in range(self.C)])
 
     def predictions(self, params, E: jnp.ndarray, E_all=None) -> List:
         """R_k = p(theta_k, E_for_k) for every party (paper grad masking)."""
-        out = []
-        for k in range(self.C):
-            Ek = E
-            if self.grad_mode == "easter" and E_all is not None:
-                Ek = (jax.lax.stop_gradient(E)
-                      - jax.lax.stop_gradient(E_all[k]) / self.C
-                      + E_all[k] / self.C)
-            out.append(decide_fn(params[k], self.arches[k], Ek))
-        return out
+        R = self._predictions_stacked(params, E, E_all)
+        return [R[k] for k in range(self.C)]
 
     def forward(self, params, xs, masks=None):
         E_all = self.local_embeds(params, xs)
@@ -115,15 +139,19 @@ class EasterClassifier:
 
     def loss_fn(self, params, xs, y, masks=None):
         """Total (sum over parties) + per-party losses."""
-        _, R = self.forward(params, xs, masks)
+        E_all = self.local_embeds(params, xs)
+        E = self.global_embed(E_all, masks)
+        R_all = self._predictions_stacked(params, E, E_all)
         lf = losses.LOSSES[self.loss]
-        per = jnp.stack([lf(r, y) for r in R])
+        per = jax.vmap(lambda r: lf(r, y))(R_all)
         return jnp.sum(per), per
 
     # -- assisted-gradient reference path (message passing) ----------------
     def assisted_grads(self, params, xs, y, masks=None):
         """Paper's explicit protocol: per-party vjp with active-party loss
         assist. Returns (grads list, per-party losses)."""
+        if self.engine == "vectorized":
+            return self._assisted_grads_vectorized(params, xs, y, masks)
         lf = losses.LOSSES[self.loss]
         # step 1: local embeddings, keeping per-party vjp closures
         Es, vjp_embed = [], []
@@ -153,6 +181,27 @@ class EasterClassifier:
             grads.append(g_k)
             per_losses.append(L_k)
         return grads, jnp.stack(per_losses)
+
+    def _assisted_grads_vectorized(self, params, xs, y, masks=None):
+        """Same message-passing semantics, one vjp per party *group*."""
+        lf = losses.LOSSES[self.loss]
+        # step 1: local embeddings with group-level pullbacks
+        E_all, pull_embed = self._eng.embed_vjp(params, xs)
+        # step 2: active party aggregates (masks cancel)
+        E = jax.lax.stop_gradient(self.global_embed(E_all, masks))
+        # step 3: every party predicts from the global embedding
+        E_bcast = jnp.broadcast_to(E[None], (self.C,) + E.shape)
+        R_all, pull_dec = self._eng.decide_vjp(params, E_bcast)
+        # step 4: ACTIVE party computes every loss signal dL_k/dR_k at once
+        L_all, gR_all = jax.vmap(
+            jax.value_and_grad(lambda r: lf(r, y)))(R_all)
+        # step 5: decision-net backprop; each party receives its dL_k/dE
+        g_dec, gE_all = pull_dec(gR_all)
+        # step 6: embedding-net grads via dE/dE_k = 1/C (mean aggregation)
+        g_emb = pull_embed(gE_all / self.C)
+        grads = [jax.tree.map(lambda a, b: a + b, g_dec[k], g_emb[k])
+                 for k in range(self.C)]
+        return grads, L_all
 
     # -- training ----------------------------------------------------------
     def make_train_step(self, optimizer_name: str, lr: float, **opt_kw):
@@ -190,8 +239,10 @@ class EasterClassifier:
 
     def accuracy(self, params, xs, y) -> jnp.ndarray:
         """Per-party test accuracy (the paper's theta_1..theta_C columns)."""
-        _, R = self.forward(params, xs, masks=None)
-        return jnp.stack([jnp.mean((jnp.argmax(r, -1) == y)) for r in R])
+        E_all = self.local_embeds(params, xs)
+        E = self.global_embed(E_all, None)
+        R_all = self._predictions_stacked(params, E, E_all)
+        return jnp.mean(jnp.argmax(R_all, -1) == y[None], axis=-1)
 
 
 def split_features(x: jnp.ndarray, C: int) -> List[jnp.ndarray]:

@@ -101,7 +101,8 @@ class WireEaster:
     """Active-party orchestrator for the multi-process protocol."""
 
     def __init__(self, arches, n_features: List[int], n_classes: int,
-                 lr: float = 1e-3, seed: int = 0):
+                 lr: float = 1e-3, seed: int = 0,
+                 record_transcript: bool = False):
         import jax
         import pickle
 
@@ -123,6 +124,19 @@ class WireEaster:
         self.seed = seed
         self.conns = []
         self.procs = []
+        # security audit hook: every payload the ACTIVE party observes on
+        # the wire, as (direction, kind, round, party, np.ndarray). The
+        # trust argument is that nothing here is a raw E_k
+        # (tests/test_wire.py checks it against out-of-band recomputation).
+        self.record_transcript = record_transcript
+        self.transcript: List[Tuple[str, str, int, int, np.ndarray]] = []
+
+    def _record(self, direction: str, kind: str, round_idx: int,
+                party: int, payload):
+        if self.record_transcript:
+            self.transcript.append(
+                (direction, kind, round_idx, party,
+                 np.array(payload, copy=True)))
 
     def start(self):
         ctx = mp.get_context("spawn")
@@ -161,15 +175,22 @@ class WireEaster:
             lambda pp: embed_fn(pp, self.arches[0], jnp.asarray(xs[0])),
             self.params)
         blinded = [c.recv()[1] for c in self.conns]
+        for k, b in enumerate(blinded):
+            self._record("passive->active", "blinded_embed", round_idx,
+                         k + 1, b)
         # step 2: secure aggregation (masks cancel in the sum)
         E = (np.asarray(E_a) + sum(blinded)) / self.C
         # step 3: parties predict from the global embedding
         for c in self.conns:
             c.send(("predict", E))
+        self._record("active->passive", "global_embed", round_idx, 0, E)
         R_a, vjp_da = jax.vjp(
             lambda pp, e: decide_fn(pp, self.arches[0], e), self.params,
             jnp.asarray(E))
         R_passive = [c.recv()[1] for c in self.conns]
+        for k, r in enumerate(R_passive):
+            self._record("passive->active", "prediction", round_idx,
+                         k + 1, r)
         # step 4: loss assist — active computes dL_k/dR_k for every party
         y_j = jnp.asarray(y)
         losses = []
@@ -178,6 +199,8 @@ class WireEaster:
                 lambda r: softmax_xent(r, y_j))(jnp.asarray(R_k))
             losses.append(float(L_k))
             c.send(("grad", np.asarray(gR)))
+            self._record("active->passive", "loss_grad", round_idx,
+                         k + 1, np.asarray(gR))
         # step 5: active party's own update
         L_a, gR_a = jax.value_and_grad(
             lambda r: softmax_xent(r, y_j))(R_a)

@@ -5,8 +5,17 @@ Computes E = (E_a + sum_k (E_k + r_k)) / C in a single VMEM pass over
 materialized in HBM (beyond-paper fusion; the reference path materializes
 [E_k] explicitly the way the paper's protocol transmits them).
 
-The K party dim is kept whole inside each tile (K is small: the paper uses
-C = 4) so the reduction is a VMEM-local sum.
+The party dim K is *tiled* (``block_k``): each grid step reduces a
+(bk, bn, bd) slab into a float32 VMEM accumulator, so VMEM holds
+O(block_k x bn x bd) regardless of K — the seed kernel kept K whole per
+tile, which stopped fitting once the vectorized party engine pushed
+federations past the paper's C = 4 (K = 64+ at 256x128 tiles is >8 MB).
+
+The kernel carries a ``jax.custom_vjp``: aggregation is linear with
+dE/dE_a = dE/dE_k = dE/dr_k = 1/C, so the backward pass is one fused
+broadcast kernel emitting every party's gE / C pullback in a single pass
+(this is exactly the per-party embedding-net loss signal of Alg. 1 line 14;
+see core/protocol.py). Without it, jax.grad of a pallas_call is undefined.
 """
 from __future__ import annotations
 
@@ -15,28 +24,50 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _blind_agg_kernel(ea_ref, ep_ref, m_ref, o_ref, *, inv_c: float):
-    ea = ea_ref[...].astype(jnp.float32)            # (bn, bd)
-    ep = ep_ref[...].astype(jnp.float32)            # (K, bn, bd)
-    msk = m_ref[...].astype(jnp.float32)            # (K, bn, bd)
-    tot = ea + jnp.sum(ep + msk, axis=0)
-    o_ref[...] = (tot * inv_c).astype(o_ref.dtype)
+def _largest_divisor(n: int, cap: int) -> int:
+    b = max(1, min(cap, n))
+    while n % b:
+        b -= 1
+    return b
 
 
-def blind_agg(E_active: jnp.ndarray, E_passive: jnp.ndarray,
-              masks: jnp.ndarray, *, block_n: int = 256, block_d: int = 128,
-              interpret: bool = False) -> jnp.ndarray:
-    """E_active (..., d); E_passive/masks (K, ..., d). Returns (..., d)."""
-    K = E_passive.shape[0]
-    C = K + 1
-    orig_shape = E_active.shape
-    d = orig_shape[-1]
-    N = E_active.size // d
-    ea = E_active.reshape(N, d)
-    ep = E_passive.reshape(K, N, d)
-    mk = masks.reshape(K, N, d)
+def _fwd_kernel(ea_ref, ep_ref, m_ref, o_ref, acc_ref, *, inv_c: float,
+                gk: int):
+    kk = pl.program_id(2)
+    part = jnp.sum(ep_ref[...].astype(jnp.float32)
+                   + m_ref[...].astype(jnp.float32), axis=0)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = ea_ref[...].astype(jnp.float32) + part
+
+    @pl.when(kk > 0)
+    def _acc():
+        acc_ref[...] += part
+
+    @pl.when(kk == gk - 1)
+    def _fin():
+        o_ref[...] = (acc_ref[...] * inv_c).astype(o_ref.dtype)
+
+
+def _bwd_kernel(g_ref, dea_ref, dep_ref, *, inv_c: float):
+    kk = pl.program_id(2)
+    g = g_ref[...].astype(jnp.float32) * inv_c       # (bn, bd)
+
+    @pl.when(kk == 0)
+    def _active():
+        dea_ref[...] = g.astype(dea_ref.dtype)
+
+    bk = dep_ref.shape[0]
+    dep_ref[...] = jnp.broadcast_to(g[None], (bk,) + g.shape).astype(
+        dep_ref.dtype)
+
+
+def _blocks(N: int, d: int, K: int, block_n: int, block_d: int,
+            block_k: int):
     bn = min(block_n, N)
     bd = min(block_d, d)
     while N % bn:
@@ -44,17 +75,81 @@ def blind_agg(E_active: jnp.ndarray, E_passive: jnp.ndarray,
     while d % bd:
         bd //= 2
     bn, bd = max(bn, 1), max(bd, 1)
-    grid = (N // bn, d // bd)
-    out = pl.pallas_call(
-        functools.partial(_blind_agg_kernel, inv_c=1.0 / C),
+    bk = _largest_divisor(K, block_k)
+    return bn, bd, bk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _blind_agg(ea, ep, mk, dtypes, block_n, block_d, block_k, interpret,
+               n_passive):
+    """ea (N, d); ep/mk (K, N, d) -> (N, d). Differentiable (custom VJP).
+
+    ``dtypes``/``n_passive`` duplicate static facts about ep/mk so the
+    backward rule can rebuild cotangent avals without array residuals.
+    """
+    K, N, d = ep.shape
+    bn, bd, bk = _blocks(N, d, K, block_n, block_d, block_k)
+    grid = (N // bn, d // bd, K // bk)       # k innermost: output block
+    return pl.pallas_call(                   # finishes before moving on
+        functools.partial(_fwd_kernel, inv_c=1.0 / (K + 1), gk=K // bk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
-            pl.BlockSpec((K, bn, bd), lambda i, j: (0, i, j)),
-            pl.BlockSpec((K, bn, bd), lambda i, j: (0, i, j)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bk, bn, bd), lambda i, j, k: (k, i, j)),
+            pl.BlockSpec((bk, bn, bd), lambda i, j, k: (k, i, j)),
         ],
-        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((N, d), E_active.dtype),
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, d), ea.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
         interpret=interpret,
     )(ea, ep, mk)
+
+
+def _blind_agg_fwd(ea, ep, mk, dtypes, block_n, block_d, block_k, interpret,
+                   n_passive):
+    out = _blind_agg(ea, ep, mk, dtypes, block_n, block_d, block_k,
+                     interpret, n_passive)
+    return out, None
+
+
+def _blind_agg_bwd(dtypes, block_n, block_d, block_k, interpret, n_passive,
+                   res, g):
+    ep_dtype, mk_dtype = dtypes
+    K = n_passive
+    N, d = g.shape
+    bn, bd, bk = _blocks(N, d, K, block_n, block_d, block_k)
+    grid = (N // bn, d // bd, K // bk)
+    dea, dep = pl.pallas_call(
+        functools.partial(_bwd_kernel, inv_c=1.0 / (K + 1)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, bd), lambda i, j, k: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bk, bn, bd), lambda i, j, k: (k, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, d), g.dtype),
+            jax.ShapeDtypeStruct((K, N, d), ep_dtype),
+        ],
+        interpret=interpret,
+    )(g)
+    return dea.astype(g.dtype), dep, dep.astype(mk_dtype)
+
+
+_blind_agg.defvjp(_blind_agg_fwd, _blind_agg_bwd)
+
+
+def blind_agg(E_active: jnp.ndarray, E_passive: jnp.ndarray,
+              masks: jnp.ndarray, *, block_n: int = 256, block_d: int = 128,
+              block_k: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """E_active (..., d); E_passive/masks (K, ..., d). Returns (..., d)."""
+    K = E_passive.shape[0]
+    orig_shape = E_active.shape
+    d = orig_shape[-1]
+    N = E_active.size // d
+    ea = E_active.reshape(N, d)
+    ep = E_passive.reshape(K, N, d)
+    mk = masks.reshape(K, N, d)
+    out = _blind_agg(ea, ep, mk, (ep.dtype, mk.dtype), block_n, block_d,
+                     block_k, interpret, int(K))
     return out.reshape(orig_shape)

@@ -29,11 +29,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                interpret=not _on_tpu())
 
 
-@partial(jax.jit, static_argnames=("block_n", "block_d"))
+@partial(jax.jit, static_argnames=("block_n", "block_d", "block_k"))
 def blind_agg(E_active, E_passive, masks, *, block_n: int = 256,
-              block_d: int = 128):
+              block_d: int = 128, block_k: int = 8):
     return _ba.blind_agg(E_active, E_passive, masks, block_n=block_n,
-                         block_d=block_d, interpret=not _on_tpu())
+                         block_d=block_d, block_k=block_k,
+                         interpret=not _on_tpu())
 
 
 @partial(jax.jit, static_argnames=("block_b", "block_w", "chunk"))

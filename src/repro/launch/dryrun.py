@@ -93,7 +93,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
     params = steps_mod._abstract_params(sys)
 
     t0 = time.time()
-    with shard_rules.ambient_mesh(mesh, layout), jax.set_mesh(mesh):
+    with shard_rules.ambient_mesh(mesh, layout), shard_rules.use_mesh(mesh):
         if shape.kind == "train":
             opt_name = pick_optimizer(cfg)
             _, opt_state = steps_mod.abstract_state(sys, opt_name)
@@ -101,6 +101,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
             in_sh, out_sh = steps_mod.train_shardings(
                 sys, mesh, specs, params, opt_state, zero1=zero1,
                 layout=layout)
+            in_sh = steps_mod.to_shardings(mesh, in_sh)
+            out_sh = steps_mod.to_shardings(mesh, out_sh)
             fn = jax.jit(train_step, in_shardings=in_sh,
                          out_shardings=out_sh, donate_argnums=(0, 1))
             lowered = fn.lower(params, opt_state, specs["batch"],
@@ -110,6 +112,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
             out_caches = jax.eval_shape(prefill, params, specs["batch"])[1]
             in_sh, out_sh = steps_mod.prefill_shardings(
                 sys, mesh, specs, params, out_caches)
+            in_sh = steps_mod.to_shardings(mesh, in_sh)
+            out_sh = steps_mod.to_shardings(mesh, out_sh)
             fn = jax.jit(prefill, in_shardings=in_sh, out_shardings=out_sh)
             lowered = fn.lower(params, specs["batch"])
         else:  # decode
@@ -120,6 +124,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
             args = [params, specs["batch"], specs["caches"], specs["pos"]]
             if "fe_list" in specs:
                 args.append(specs["fe_list"])
+            in_sh = steps_mod.to_shardings(mesh, in_sh)
+            out_sh = steps_mod.to_shardings(mesh, out_sh)
             fn = jax.jit(serve, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=(2,))
             lowered = fn.lower(*args)
@@ -129,6 +135,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):        # jax 0.4.x: one dict/device
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     n_dev = mesh.devices.size
     result = {

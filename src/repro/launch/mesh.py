@@ -1,22 +1,40 @@
 """Production mesh construction (functions only — importing this module must
-never touch jax device state)."""
+never touch jax device state).
+
+All constructors are version-robust: ``jax.sharding.AxisType`` /
+explicit-sharding mesh kwargs appeared after 0.4.x, and
+``AbstractMesh``'s signature changed from ``((name, size), ...)`` to
+``(sizes, names)`` — we support both so the suite runs on the pinned
+container image and on current jax.
+"""
 from __future__ import annotations
 
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto_kwargs(n):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e production mesh: 16x16 = 256 chips/pod; 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kwargs(len(axes)))
 
 
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small host mesh for CPU integration tests."""
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+                         **_auto_kwargs(2))
+
+
+def abstract_mesh(shape, names):
+    """Device-free mesh for sharding-spec logic, both AbstractMesh APIs."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(names))
+    except TypeError:                      # jax 0.4.x: ((name, size), ...)
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))

@@ -41,6 +41,9 @@ def main():
     ap.add_argument("--no-easter", action="store_true")
     ap.add_argument("--grad-mode", default="easter",
                     choices=["easter", "joint"])
+    ap.add_argument("--engine", default="vectorized",
+                    choices=["vectorized", "loop"],
+                    help="passive-party execution: grouped vmap | seed loop")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true",
                     help="restore params/opt state from --ckpt if present")
@@ -55,8 +58,9 @@ def main():
     easter = EasterConfig(num_passive=args.num_passive,
                           d_embed=args.d_embed, mask_mode=args.mask_mode,
                           enabled=not args.no_easter)
-    sys_ = EasterLM(cfg=cfg, easter=easter, grad_mode=args.grad_mode)
-    print(f"arch={cfg.name} parties={sys_.C} "
+    sys_ = EasterLM(cfg=cfg, easter=easter, grad_mode=args.grad_mode,
+                    engine=args.engine)
+    print(f"arch={cfg.name} parties={sys_.C} engine={args.engine} "
           f"party_depths={[c.n_layers for c in sys_.party_cfgs]} "
           f"d_embed={easter.d_embed}")
 

@@ -43,6 +43,14 @@ def ambient_mesh(mesh: Mesh, layout: str = "tp"):
         _AMBIENT_MESH.pop()
 
 
+def use_mesh(mesh: Mesh):
+    """Version-robust ``jax.set_mesh``: the explicit-sharding setter where
+    it exists (jax >= 0.6), the Mesh context manager on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def constrain(x: jnp.ndarray, spec: Tuple) -> jnp.ndarray:
     if not _AMBIENT_MESH:
         return x

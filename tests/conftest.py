@@ -1,0 +1,33 @@
+"""Test bootstrap: src/ on sys.path + hypothesis fallback.
+
+Makes bare ``python -m pytest`` work without the PYTHONPATH=src
+incantation (pytest.ini's ``pythonpath = src`` covers pytest >= 7; this
+covers direct imports and older runners), and substitutes the
+deterministic stub in tests/_hypothesis_stub.py when the real
+``hypothesis`` package is absent from the environment.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+# tests/test_distributed.py needs >1 host device; this must land before the
+# first jax backend init, and conftest import precedes every test module.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "_hypothesis_stub.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod

@@ -31,9 +31,11 @@ def _sys(arch="qwen2.5-3b"):
         cfg, EasterConfig(num_passive=3, d_embed=64, decision_layers=1))
 
 
+from repro.launch.mesh import make_debug_mesh                # noqa: E402
+
+
 def _mesh():
-    return jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_debug_mesh(2, 2)
 
 
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen3-moe-235b-a22b",
@@ -57,7 +59,11 @@ def test_sharded_train_step_matches_single_device(arch):
     specs = {"batch": batch}
     in_sh, out_sh = steps_mod.train_shardings(sys, mesh, specs, params,
                                               opt_state)
-    with shard_rules.ambient_mesh(mesh), jax.set_mesh(mesh):
+    # jax 0.4.x jit accepts only Sharding objects (newer releases also take
+    # raw PartitionSpecs under set_mesh); NamedSharding works on both
+    in_sh = steps_mod.to_shardings(mesh, in_sh)
+    out_sh = steps_mod.to_shardings(mesh, out_sh)
+    with shard_rules.ambient_mesh(mesh), shard_rules.use_mesh(mesh):
         f = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh)
         _, _, m_sh = f(params, opt_state, batch, step_i)
     np.testing.assert_allclose(float(m_ref["loss"]), float(m_sh["loss"]),
@@ -80,7 +86,9 @@ def test_sharded_serve_step_matches_single_device():
     logits_ref, _ = jax.jit(serve)(params, batch, caches, pos)
     specs = {"batch": batch, "caches": caches, "pos": pos}
     in_sh, out_sh = steps_mod.serve_shardings(sys, mesh, specs, params)
-    with shard_rules.ambient_mesh(mesh), jax.set_mesh(mesh):
+    in_sh = steps_mod.to_shardings(mesh, in_sh)
+    out_sh = steps_mod.to_shardings(mesh, out_sh)
+    with shard_rules.ambient_mesh(mesh), shard_rules.use_mesh(mesh):
         f = jax.jit(serve, in_shardings=in_sh, out_shardings=out_sh)
         logits_sh, _ = f(params, batch, caches, pos)
     np.testing.assert_allclose(np.asarray(logits_ref, np.float32),

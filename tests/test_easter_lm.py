@@ -55,6 +55,29 @@ def test_train_step_decreases_loss():
     assert losses[-1] < losses[0]
 
 
+def test_vectorized_engine_matches_loop():
+    """The stacked-passive vmap path (engine="vectorized", default) must
+    reproduce the per-party loop's loss and grads."""
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1)
+    sv = EasterLM(cfg=cfg, easter=e)
+    sl = EasterLM(cfg=cfg, easter=e, engine="loop")
+    assert sv._passive_group_ok() and not sl._passive_group_ok()
+    params = sv.init_params(jax.random.PRNGKey(9))
+    batch = _batch(sv)
+    seeds = sv.mask_seeds()
+    lv, pv = sv.loss_fn(params, batch, 0, seeds)
+    ll, pl_ = sl.loss_fn(params, batch, 0, seeds)
+    np.testing.assert_allclose(float(lv), float(ll), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(pv), np.asarray(pl_), rtol=1e-6)
+    gv = jax.grad(lambda p: sv.loss_fn(p, batch, 0, seeds)[0])(params)
+    gl = jax.grad(lambda p: sl.loss_fn(p, batch, 0, seeds)[0])(params)
+    for a, b in zip(jax.tree.leaves(gv), jax.tree.leaves(gl)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-7)
+
+
 def test_loss_invariant_to_blinding():
     sys = _system()
     params = sys.init_params(jax.random.PRNGKey(1))

@@ -55,18 +55,86 @@ def test_blind_agg_sweep(K, n, d, seed):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("K,block_k", [(3, 8), (16, 4)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_blind_agg_dtypes(dtype):
+def test_blind_agg_dtypes(dtype, K, block_k):
+    """Including K-tiled grids (block_k < K): the f32 scratch accumulator
+    must keep bf16 exact vs the f32-then-cast reference."""
     Ea = jax.random.normal(KEY, (8, 3, 32, 16), dtype)   # 4-D embedding
-    Ep = jax.random.normal(jax.random.fold_in(KEY, 3), (3, 8, 3, 32, 16),
+    Ep = jax.random.normal(jax.random.fold_in(KEY, 3), (K, 8, 3, 32, 16),
                            dtype)
-    M = jax.random.normal(jax.random.fold_in(KEY, 4), (3, 8, 3, 32, 16),
+    M = jax.random.normal(jax.random.fold_in(KEY, 4), (K, 8, 3, 32, 16),
                           jnp.float32).astype(dtype)
-    got = blind_agg(Ea, Ep, M, interpret=True)
+    got = blind_agg(Ea, Ep, M, block_k=block_k, interpret=True)
     want = ref.reference_blind_agg(Ea, Ep, M)
     assert got.shape == Ea.shape
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("K,n,d", [
+    (3, 7, 13), (5, 100, 24), (63, 33, 129), (64, 16, 96),
+])
+def test_blind_agg_non_pow2_and_k_tiled(K, n, d):
+    """Non-power-of-two token/embed dims and K-tiled grids (block_k < K)
+    agree with the whole-K reference."""
+    key = jax.random.PRNGKey(K * 1000 + n)
+    Ea = jax.random.normal(key, (n, d))
+    Ep = jax.random.normal(jax.random.fold_in(key, 1), (K, n, d))
+    M = jax.random.normal(jax.random.fold_in(key, 2), (K, n, d))
+    want = ref.reference_blind_agg(Ea, Ep, M)
+    for bk in (1, 4, 8, K):
+        got = blind_agg(Ea, Ep, M, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("K,bk", [(3, 8), (16, 4), (64, 8)])
+def test_blind_agg_custom_vjp_matches_reference_grad(K, bk):
+    """The fused backward (per-party gE/C pullback in one pass) must equal
+    jax.grad of the jnp reference for E_a, every E_k, and every mask."""
+    key = jax.random.PRNGKey(17 + K)
+    Ea = jax.random.normal(key, (12, 40))
+    Ep = jax.random.normal(jax.random.fold_in(key, 1), (K, 12, 40))
+    M = jax.random.normal(jax.random.fold_in(key, 2), (K, 12, 40))
+
+    def f_kernel(ea, ep, m):
+        return jnp.sum(jnp.sin(blind_agg(ea, ep, m, block_k=bk,
+                                         interpret=True)))
+
+    def f_ref(ea, ep, m):
+        return jnp.sum(jnp.sin(ref.reference_blind_agg(ea, ep, m)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(Ea, Ep, M)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(Ea, Ep, M)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_blind_agg_grad_under_jit_via_ops():
+    """The jit'd public wrapper is differentiable end-to-end (custom VJP
+    survives jit + the ops-level static args)."""
+    key = jax.random.PRNGKey(23)
+    Ea = jax.random.normal(key, (16, 8))
+    Ep = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, 8))
+    M = jnp.zeros_like(Ep)
+    g = jax.jit(jax.grad(lambda ea: jnp.sum(ops.blind_agg(ea, Ep, M))))(Ea)
+    # dE/dE_a = 1/C elementwise
+    np.testing.assert_allclose(np.asarray(g), np.full((16, 8), 1 / 5.0),
+                               atol=1e-6)
+
+
+def test_blind_agg_higher_rank_batch_dims():
+    """(B, S, d) embeddings (the LLM-scale layout) round-trip the reshape."""
+    key = jax.random.PRNGKey(29)
+    Ea = jax.random.normal(key, (2, 9, 24))
+    Ep = jax.random.normal(jax.random.fold_in(key, 1), (6, 2, 9, 24))
+    M = jax.random.normal(jax.random.fold_in(key, 2), (6, 2, 9, 24))
+    got = blind_agg(Ea, Ep, M, block_k=2, interpret=True)
+    want = ref.reference_blind_agg(Ea, Ep, M)
+    assert got.shape == (2, 9, 24)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
 @pytest.mark.parametrize("B,L,W,chunk", [

@@ -1,21 +1,44 @@
 """Protocol gradient semantics: the paper's assisted backward pass (message
-passing, Alg. 1 lines 11-15) must match the fused stop-gradient surrogate."""
+passing, Alg. 1 lines 11-15) must match the fused stop-gradient surrogate,
+and the vectorized party engine (core/party_engine.py) must match the
+per-party loop engine bit-for-bit."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import EasterConfig
+from repro.core.party_engine import PartyEngine, group_by
 from repro.core.party_models import PartyArch
 from repro.core.protocol import EasterClassifier, split_features
 
+ENGINES = ["vectorized", "loop"]
 
-def _make_sys(grad_mode="easter", K=3, mask_mode="float"):
+
+def _hetero_arches(C, d_embed=24, n_cls=5):
+    """Heterogeneous zoo (paper Table II flavour): MLPs of different
+    width/depth plus a conv party when C is big enough."""
+    zoo = [
+        PartyArch("mlp", (32, 16), (16,), d_embed, n_cls),
+        PartyArch("mlp", (48,), (24,), d_embed, n_cls),
+        PartyArch("cnn", (4, 8), (16,), d_embed, n_cls, image_hw=(8, 3)),
+        PartyArch("mlp", (32, 16), (16,), d_embed, n_cls),
+    ]
+    nfs = [10, 9, 24, 10]
+    return zoo[:C], nfs[:C]
+
+
+def _make_sys(grad_mode="easter", K=3, mask_mode="float",
+              engine="vectorized", hetero=False):
     C = K + 1
-    arches = [PartyArch("mlp", (32, 16), (16,), 24, 5) for _ in range(C)]
-    nf = [10, 9, 9, 9][:C]
+    if hetero:
+        arches, nf = _hetero_arches(C)
+    else:
+        arches = [PartyArch("mlp", (32, 16), (16,), 24, 5) for _ in range(C)]
+        nf = [10, 9, 9, 9][:C]
     e = EasterConfig(num_passive=K, d_embed=24, mask_mode=mask_mode)
-    return EasterClassifier(e, arches, nf, grad_mode=grad_mode)
+    return EasterClassifier(e, arches, nf, grad_mode=grad_mode,
+                            engine=engine)
 
 
 def _batch(sys, B=6, seed=0):
@@ -26,8 +49,18 @@ def _batch(sys, B=6, seed=0):
     return xs, y
 
 
-def test_assisted_equals_surrogate_autodiff():
-    sys = _make_sys()
+# ---------------------------------------------------------------------------
+# surrogate == assisted message-passing protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("C", [2, 4])
+@pytest.mark.parametrize("hetero", [False, True])
+def test_assisted_equals_surrogate_autodiff(engine, C, hetero):
+    """One jax.grad of the stop-gradient surrogate == the paper's explicit
+    per-party active-assisted backward pass (atol 1e-5)."""
+    sys = _make_sys(K=C - 1, engine=engine, hetero=hetero)
     params = sys.init_params(jax.random.PRNGKey(1))
     xs, y = _batch(sys)
     masks = sys.masks(6, 0)
@@ -35,6 +68,22 @@ def test_assisted_equals_surrogate_autodiff():
     g_assist, _ = sys.assisted_grads(params, xs, y, masks)
     for ga, gb in zip(g_auto, g_assist):
         for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+@pytest.mark.parametrize("grad_mode", ["easter", "joint"])
+def test_decision_grads_match_assisted_in_both_modes(grad_mode):
+    """Decision-net grads agree with the assisted protocol in BOTH grad
+    modes — the modes only differ in cross-party embedding flow."""
+    sys = _make_sys(grad_mode)
+    params = sys.init_params(jax.random.PRNGKey(7))
+    xs, y = _batch(sys)
+    g_auto = jax.grad(lambda p: sys.loss_fn(p, xs, y, None)[0])(params)
+    g_assist, _ = sys.assisted_grads(params, xs, y, None)
+    for k in range(sys.C):
+        for a, b in zip(jax.tree.leaves(g_auto[k]["decide"]),
+                        jax.tree.leaves(g_assist[k]["decide"])):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        atol=1e-5)
 
@@ -69,6 +118,69 @@ def test_decision_net_grads_identical_between_modes():
                                        atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# vectorized engine == loop engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("grad_mode", ["easter", "joint"])
+@pytest.mark.parametrize("hetero", [False, True])
+def test_vectorized_engine_matches_loop_bitexact(grad_mode, hetero):
+    """Forward values, per-party losses AND grads are bit-identical between
+    the grouped-vmap engine and the per-party loop."""
+    sv = _make_sys(grad_mode, engine="vectorized", hetero=hetero)
+    sl = _make_sys(grad_mode, engine="loop", hetero=hetero)
+    params = sv.init_params(jax.random.PRNGKey(11))
+    xs, y = _batch(sv)
+    masks = sv.masks(6, 0)
+    np.testing.assert_array_equal(
+        np.asarray(sv.local_embeds(params, xs)),
+        np.asarray(sl.local_embeds(params, xs)))
+    (tv, pv) = sv.loss_fn(params, xs, y, masks)
+    (tl, pl_) = sl.loss_fn(params, xs, y, masks)
+    np.testing.assert_array_equal(np.asarray(tv), np.asarray(tl))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(pl_))
+    gv = jax.grad(lambda p: sv.loss_fn(p, xs, y, masks)[0])(params)
+    gl = jax.grad(lambda p: sl.loss_fn(p, xs, y, masks)[0])(params)
+    for a, b in zip(jax.tree.leaves(gv), jax.tree.leaves(gl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vectorized_assisted_matches_loop_assisted():
+    sv = _make_sys(engine="vectorized", hetero=True)
+    sl = _make_sys(engine="loop", hetero=True)
+    params = sv.init_params(jax.random.PRNGKey(12))
+    xs, y = _batch(sv)
+    gv, Lv = sv.assisted_grads(params, xs, y, None)
+    gl, Ll = sl.assisted_grads(params, xs, y, None)
+    np.testing.assert_array_equal(np.asarray(Lv), np.asarray(Ll))
+    for a, b in zip(jax.tree.leaves(gv), jax.tree.leaves(gl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_groups_parties_by_signature():
+    """128 near-equal slices of 4 distinct arches -> O(#arches x 2) groups,
+    not O(C); party order round-trips through the scatter permutation."""
+    C = 128
+    arches, _ = _hetero_arches(4)
+    arches = [arches[k % 2] for k in range(C)]        # 2 mlp signatures
+    nf = [v.shape[-1] for v in
+          split_features(jnp.zeros((1, 2 * C + C // 2)), C)]
+    eng = PartyEngine(arches, nf)
+    assert eng.n_groups <= 4                          # 2 arches x 2 widths
+    assert sorted(i for _, idx in eng.groups for i in idx) == list(range(C))
+
+
+def test_group_by_stable():
+    groups = group_by(["a", "b", "a", "c", "b"])
+    assert groups == [("a", (0, 2)), ("b", (1, 4)), ("c", (3,))]
+
+
+# ---------------------------------------------------------------------------
+# mask / loss invariances (unchanged semantics)
+# ---------------------------------------------------------------------------
+
+
 def test_masks_do_not_change_gradients():
     sys = _make_sys()
     params = sys.init_params(jax.random.PRNGKey(4))
@@ -86,6 +198,27 @@ def test_loss_value_invariant_to_masks_int32():
     l0, _ = sys.loss_fn(params, xs, y, None)
     l1, _ = sys.loss_fn(params, xs, y, sys.masks(6, 0))
     assert abs(float(l0) - float(l1)) < 1e-3
+
+
+@pytest.mark.parametrize("grad_mode", ["easter", "joint"])
+def test_kernel_aggregation_path_matches_reference(grad_mode):
+    """use_kernel=True (fused Pallas blind_agg + custom VJP) gives the same
+    loss and grads as the jnp aggregation path. grad_mode="joint" is the
+    case that actually backprops THROUGH the kernel (easter mode
+    stop-gradients the aggregate and pulls grads via the surrogate term)."""
+    sys_r = _make_sys(grad_mode)
+    sys_k = _make_sys(grad_mode)
+    sys_k.use_kernel = True
+    params = sys_r.init_params(jax.random.PRNGKey(6))
+    xs, y = _batch(sys_r)
+    masks = sys_r.masks(6, 0)
+    lr_, _ = sys_r.loss_fn(params, xs, y, masks)
+    lk, _ = sys_k.loss_fn(params, xs, y, masks)
+    np.testing.assert_allclose(float(lr_), float(lk), atol=1e-5)
+    gr = jax.grad(lambda p: sys_r.loss_fn(p, xs, y, masks)[0])(params)
+    gk = jax.grad(lambda p: sys_k.loss_fn(p, xs, y, masks)[0])(params)
+    for a, b in zip(jax.tree.leaves(gr), jax.tree.leaves(gk)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
 def test_split_features_partition():

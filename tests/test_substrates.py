@@ -125,8 +125,8 @@ def test_checkpoint_roundtrip(tmp_path):
 def test_param_specs_cover_model_zoo():
     from repro.configs.base import get_config, smoke_variant
     from repro.models import build
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(1, 1)
     for arch in ["qwen2.5-3b", "qwen3-moe-235b-a22b", "mamba2-2.7b",
                  "recurrentgemma-9b"]:
         cfg = smoke_variant(get_config(arch))
@@ -141,7 +141,8 @@ def test_param_specs_cover_model_zoo():
 
 def test_fsdp_overlay_shards_large_leaves():
     # AbstractMesh: spec logic only, no physical devices needed
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     leaf = jax.ShapeDtypeStruct((8, 1024, 2048), jnp.float32)
     sp = shard_rules._add_fsdp(P(None, None, "model"), leaf, mesh)
     assert any(e == "data" or e == ("data",) for e in sp)

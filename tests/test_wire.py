@@ -1,10 +1,11 @@
 """Multi-process wire-protocol deployment (core/wire.py): the paper's
 actual trust model — passive parties as separate processes; raw embeddings
 never cross process boundaries unblinded."""
+import jax
 import numpy as np
 import pytest
 
-from repro.core.party_models import PartyArch
+from repro.core.party_models import PartyArch, embed_fn, init_party
 from repro.core.wire import WireEaster
 from repro.data import make_dataset, vertical_partition
 from repro.data.pipeline import batch_iterator
@@ -34,3 +35,50 @@ def test_wire_protocol_trains():
         assert (acc > 0.3).all(), acc
     finally:
         sys.stop()
+
+
+def test_wire_transcript_contains_only_blinded_embeddings():
+    """Train 3 rounds with the transcript recorder on: losses decrease, and
+    every embedding the active party ever sees is E_k + r_k — never a raw
+    E_k. Raw E_k is recomputed OUT-OF-BAND (the passive party's params are
+    seeded deterministically), so the check is exact, not statistical."""
+    ds = make_dataset("mnist_like", n_train=256, n_test=64, seed=2)
+    C = 3                                     # K = 2 passive => masks active
+    xs_all = vertical_partition(ds.x_train, C, ds.image_hw)
+    nf = [v.shape[-1] for v in xs_all]
+    arches = [PartyArch("mlp", (32,), (16,), 24, ds.n_classes)
+              for _ in range(C)]
+    seed = 0
+    sys = WireEaster(arches, nf, ds.n_classes, lr=3e-3, seed=seed,
+                     record_transcript=True)
+    xb, yb = ds.x_train[:64], ds.y_train[:64]
+    xs = vertical_partition(xb, C, ds.image_hw)
+    sys.start()
+    try:
+        losses = [sum(sys.round(xs, yb, r)) for r in range(3)]
+    finally:
+        sys.stop()
+    assert losses[-1] < losses[0], losses
+
+    embeds = [t for t in sys.transcript if t[1] == "blinded_embed"]
+    assert len(embeds) == 3 * (C - 1)
+    # out-of-band: raw E_k at round 0 from the passive party's seeded init
+    raws = []
+    for k in range(1, C):
+        p_k = init_party(jax.random.PRNGKey(seed + k), arches[k], nf[k])
+        raws.append(np.asarray(embed_fn(p_k, arches[k],
+                                        jax.numpy.asarray(xs[k]))))
+    round0 = [t for t in embeds if t[2] == 0]
+    deltas = []
+    for (_, _, _, party, blinded), raw in zip(round0, raws):
+        # the wire payload is NOT the raw embedding...
+        assert np.max(np.abs(blinded - raw)) > 0.5, \
+            "raw embedding leaked on the wire"
+        deltas.append(blinded - raw)
+    # ...but the masks it carries cancel pairwise (Eq. 5) — so it IS the
+    # blinded embedding, not arbitrary corruption
+    np.testing.assert_allclose(sum(deltas), np.zeros_like(deltas[0]),
+                               atol=1e-4)
+    # and nothing else on the uplink is embedding-shaped raw data
+    kinds = {t[1] for t in sys.transcript if t[0] == "passive->active"}
+    assert kinds == {"blinded_embed", "prediction"}
