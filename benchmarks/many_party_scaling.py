@@ -6,15 +6,27 @@ C in {4, 16, 64, 128} and times one jitted EASTER training round
 (embed -> blind -> aggregate -> decide -> per-party grads -> update) on
 synthetic vertically-split features, comparing:
 
-  * engine=vectorized — grouped-vmap engine (O(#groups) XLA ops)
-  * engine=loop       — the seed's per-party Python loop (O(C) ops);
+  * engine=vectorized — grouped-vmap engine (O(#groups) XLA ops) + the
+                        batched MaskEngine (O(1) traced mask-synthesis ops)
+  * engine=loop       — the seed's per-party Python loop (O(C) ops) and the
+                        O(C^2) pairwise mask loop;
                         skipped above --loop-max-c (trace time explodes)
   * --use-kernel      — fused Pallas blind_agg aggregation (K-tiled,
                         custom VJP) instead of the jnp reference
+  * --fused-masks     — synthesize masks INSIDE the Pallas kernel
+                        (pltpu PRNG; MaskEngine fallback off-TPU)
+
+Every row also reports per-round mask-synthesis cost: ``mask_first_ms``
+(trace + compile + first run — the loop oracle's O(K^2) host-side trace
+cost lands here) and ``mask_ms`` (steady-state jitted synthesis with a
+fresh round index). ``--mask-only`` skips the training-round timing, for
+sweeping mask synthesis to C=128 on both engines cheaply.
 
 Usage:
     PYTHONPATH=src python benchmarks/many_party_scaling.py          # full
     PYTHONPATH=src python benchmarks/many_party_scaling.py --smoke  # C=64
+    PYTHONPATH=src python benchmarks/many_party_scaling.py \
+        --mask-only --cs 128 --engine both --loop-max-c 128  # tentpole check
 """
 from __future__ import annotations
 
@@ -40,15 +52,47 @@ def mlp_zoo(C: int, n_cls: int, d_embed: int) -> list:
 
 
 def build(C: int, n_feat_total: int, d_embed: int, n_cls: int,
-          engine: str, use_kernel: bool, mask_mode: str) -> tuple:
+          engine: str, use_kernel: bool, mask_mode: str,
+          fused_masks: bool = False) -> tuple:
     x = jax.random.normal(jax.random.PRNGKey(0), (1, n_feat_total))
     nf = [v.shape[-1] for v in split_features(x, C)]
     arches = mlp_zoo(C, n_cls, d_embed)
     e = EasterConfig(num_passive=C - 1, d_embed=d_embed,
                      mask_mode=mask_mode)
+    t0 = time.perf_counter()
     sys = EasterClassifier(e, arches, nf, engine=engine,
-                           use_kernel=use_kernel)
-    return sys, nf
+                           use_kernel=use_kernel, fused_masks=fused_masks)
+    setup_s = time.perf_counter() - t0      # DH ceremony: K(K-1)/2 modexps
+    return sys, nf, setup_s
+
+
+def time_masks(sys, batch: int, rounds: int = 5) -> dict:
+    """Per-round mask synthesis cost — the tentpole target (O(K^2) traced
+    PRF ops in the loop oracle vs O(1) in the batched MaskEngine).
+
+    With --fused-masks, synthesis is inseparable from aggregation by
+    design (sys.masks() returns only a marker), so the columns report the
+    fused blind+aggregate instead — comparable to mask synthesis + the
+    jnp aggregate of the other rows, not to synthesis alone."""
+    if sys.K < 2 or not sys.easter.enabled:
+        return {"mask_first_ms": 0.0, "mask_ms": 0.0}
+    if sys.fused_masks:
+        from repro.core import aggregation
+        E_all = jnp.zeros((sys.C, batch, sys.easter.d_embed), jnp.float32)
+        f = jax.jit(lambda r: aggregation.blind_and_aggregate_fused(
+            E_all, sys.mask_engine, r))
+    else:
+        f = jax.jit(lambda r: sys.masks(batch, r))
+    t0 = time.perf_counter()
+    m = f(jnp.asarray(0, jnp.int32))
+    jax.block_until_ready(m)
+    first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for r in range(1, rounds + 1):
+        m = f(jnp.asarray(r, jnp.int32))
+    jax.block_until_ready(m)
+    dt = (time.perf_counter() - t0) / rounds
+    return {"mask_first_ms": first * 1e3, "mask_ms": dt * 1e3}
 
 
 def time_rounds(sys, nf, batch: int, rounds: int, seed: int = 0) -> dict:
@@ -76,7 +120,8 @@ def time_rounds(sys, nf, batch: int, rounds: int, seed: int = 0) -> dict:
 
 
 def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
-        mask_mode, loop_max_c, save=None):
+        mask_mode, loop_max_c, fused_masks=False, mask_only=False,
+        save=None):
     rows = []
     for C in cs:
         for eng in engines:
@@ -84,17 +129,25 @@ def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
                 print(f"many_party C={C} engine=loop skipped "
                       f"(> --loop-max-c {loop_max_c})")
                 continue
-            sys, nf = build(C, n_feat_total, d_embed, 10, eng, use_kernel,
-                            mask_mode)
-            r = time_rounds(sys, nf, batch, rounds)
-            r.update({"C": C, "engine": eng, "batch": batch,
-                      "use_kernel": use_kernel})
+            fused_eff = fused_masks and eng == "vectorized"
+            sys, nf, setup_s = build(C, n_feat_total, d_embed, 10, eng,
+                                     use_kernel, mask_mode, fused_eff)
+            r = {"C": C, "engine": eng, "batch": batch,
+                 "use_kernel": use_kernel, "fused_masks": fused_eff,
+                 "setup_s": setup_s}
+            r.update(time_masks(sys, batch))
+            if not mask_only:
+                r.update(time_rounds(sys, nf, batch, rounds))
             rows.append(r)
+            round_txt = ("" if mask_only else
+                         f"round {r['round_ms']:8.2f} ms  "
+                         f"compile {r['compile_s']:6.1f} s  "
+                         f"loss {r['loss']:.3f}  ")
             print(f"many_party C={C:4d} engine={eng:10s} "
-                  f"groups={r['n_groups']:2d} "
-                  f"round {r['round_ms']:8.2f} ms  "
-                  f"compile {r['compile_s']:6.1f} s  "
-                  f"loss {r['loss']:.3f}")
+                  f"{round_txt}"
+                  f"ceremony {setup_s:5.1f} s  "
+                  f"mask_first {r['mask_first_ms']:9.1f} ms  "
+                  f"mask {r['mask_ms']:7.2f} ms")
     if save:
         os.makedirs(os.path.dirname(save) or ".", exist_ok=True)
         with open(save, "w") as f:
@@ -117,8 +170,13 @@ def main():
     ap.add_argument("--n-features", type=int, default=1024)
     ap.add_argument("--use-kernel", action="store_true",
                     help="fused Pallas blind_agg (interpret mode off-TPU)")
+    ap.add_argument("--fused-masks", action="store_true",
+                    help="in-kernel pltpu-PRNG mask synthesis (vectorized "
+                         "engine only; MaskEngine fallback off-TPU)")
     ap.add_argument("--mask-mode", default="float",
                     choices=["float", "int32"])
+    ap.add_argument("--mask-only", action="store_true",
+                    help="time mask synthesis only (skip training rounds)")
     ap.add_argument("--loop-max-c", type=int, default=16,
                     help="skip the loop engine above this C")
     ap.add_argument("--save", default="experiments/bench/many_party.json")
@@ -132,6 +190,7 @@ def main():
                    else [a.engine])
     run(cs, engines, a.batch, a.rounds, a.d_embed, a.n_features,
         a.use_kernel, a.mask_mode, a.loop_max_c,
+        fused_masks=a.fused_masks, mask_only=a.mask_only,
         save=None if a.smoke else a.save)
 
 

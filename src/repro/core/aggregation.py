@@ -40,7 +40,12 @@ def aggregate(E_active: jnp.ndarray, E_passive_blinded: jnp.ndarray,
 
 def blind_and_aggregate(E_all: jnp.ndarray, masks: Optional[jnp.ndarray],
                         use_kernel: bool = False) -> jnp.ndarray:
-    """E_all (C, ...): party 0 = active. masks (K, ...) for parties 1..K."""
+    """E_all (C, ...): party 0 = active. masks (K, ...) for parties 1..K.
+
+    ``masks`` may also be a ``blinding.FusedMasks`` marker plus a mask
+    engine supplied by the caller via ``blind_and_aggregate_fused`` — see
+    that function; this one only handles materialized mask tensors.
+    """
     if masks is None:
         return jnp.mean(E_all, axis=0)
     if use_kernel:
@@ -48,6 +53,22 @@ def blind_and_aggregate(E_all: jnp.ndarray, masks: Optional[jnp.ndarray],
         return kernel_ops.blind_agg(E_all[0], E_all[1:], masks)
     blinded = blind(E_all[1:], masks)
     return aggregate(E_all[0], blinded)
+
+
+def blind_and_aggregate_fused(E_all: jnp.ndarray,
+                              engine: "blinding.MaskEngine",
+                              round_idx, *,
+                              mask_scale: float = 1.0) -> jnp.ndarray:
+    """Blind + aggregate with IN-KERNEL mask synthesis (float mode).
+
+    On TPU the pltpu-PRNG Pallas kernel generates every pair mask inside
+    the aggregation tile loop, so the (K, ...) mask tensor never touches
+    HBM. Off-TPU it falls back to the MaskEngine graph path (materialized
+    masks) — same cancellation semantics, different PRF bit-stream.
+    """
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.blind_agg_prng(E_all[0], E_all[1:], engine, round_idx,
+                                     mask_scale=mask_scale)
 
 
 def aggregate_int32(E_all: jnp.ndarray, masks_i32: jnp.ndarray) -> jnp.ndarray:
@@ -60,4 +81,4 @@ def aggregate_int32(E_all: jnp.ndarray, masks_i32: jnp.ndarray) -> jnp.ndarray:
     q = blinding.quantize(E_all)                    # (C, ...)
     q = q.at[1:].add(masks_i32)                     # wrap-around add
     s = jnp.sum(q, axis=0)                          # masks cancel in Z_2^32
-    return s.astype(jnp.float32) / (blinding.FIXED_POINT_SCALE) / C
+    return blinding.dequantize(s) / C

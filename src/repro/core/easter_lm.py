@@ -21,6 +21,7 @@ The EASTER round is fused into one SPMD step:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -34,6 +35,17 @@ from repro.models import transformer
 from repro.models.layers import (
     _dense_init, apply_norm, init_linear, init_mlp, init_norm, linear, mlp,
 )
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_mask_setup(num_passive: int, vectorized: bool):
+    """One DH ceremony per (K, engine) — the EasterLM seed is fixed
+    (deterministic_seed=1729), so the result is a pure function of K."""
+    _, seeds = blinding.setup_passive_parties(num_passive,
+                                              deterministic_seed=1729)
+    if vectorized:
+        return blinding.MaskEngine.from_seeds(num_passive, seeds)
+    return seeds
 
 
 def passive_cfg(cfg: ModelConfig, easter: EasterConfig, k: int) -> ModelConfig:
@@ -81,11 +93,15 @@ class EasterLM:
 
     # -- blinding setup (host-side DH ceremony) -----------------------------
     def mask_seeds(self):
+        """DH ceremony -> mask synthesis state. Returns a MaskEngine (the
+        vectorized in-graph path, O(1) traced ops per round) or, for the
+        loop oracle engine, the raw pair-seed dict. Cached: the train,
+        serve, and prefill step builders all call this on the same system,
+        and the ceremony costs K(K-1)/2 2048-bit modexps."""
         if self.easter.num_passive < 2 or not self.easter.enabled:
             return None
-        _, seeds = blinding.setup_passive_parties(
-            self.easter.num_passive, deterministic_seed=1729)
-        return seeds
+        return _cached_mask_setup(self.easter.num_passive,
+                                  self.engine == "vectorized")
 
     # -- params --------------------------------------------------------------
     def init_party(self, key, pcfg: ModelConfig) -> Dict[str, Any]:
@@ -122,9 +138,12 @@ class EasterLM:
         return E, new_caches, aux
 
     def masks_for(self, shape, round_idx, seeds):
+        """seeds: None | MaskEngine | pair-seed dict (loop oracle)."""
         if seeds is None:
             return None
         r = round_idx if self.easter.fresh_masks else 0
+        if isinstance(seeds, blinding.MaskEngine):
+            return seeds.masks(shape, r, self.easter.mask_mode)
         return blinding.all_party_masks(
             self.easter.num_passive, seeds, shape, r, self.easter.mask_mode)
 
@@ -249,6 +268,15 @@ class EasterLM:
                    window_override: int = -1, fe_list=None):
         """One decode step: tokens (B,1). Returns (active logits, caches).
 
+        The decode uplink is blinded through the SAME _aggregate plumbing
+        as training — the paper's trust model (§IV-B/C) holds at inference
+        too: int32 mode routes through aggregate_int32 (a previous version
+        silently served UNBLINDED passive embeddings in that mode), and
+        SERVE_DOMAIN + ``pos`` acts as the round index so that, with
+        fresh_masks (the default), decode masks are fresh per step and
+        never collide with a training round's (fresh_masks=False is the
+        paper-literal static-pad mode: reuse is its documented semantics).
+
         fe_list: per-party frontend extras (e.g. whisper's precomputed
         cross-attention ``enc_kv``) — party models are heterogeneous, so
         these differ per party.
@@ -261,18 +289,31 @@ class EasterLM:
                 pos_offset=pos, window_override=window_override, **fe)
             Es.append(E_k)
             new_caches.append(nc)
-        E_all = jnp.stack(Es)
-        masks = self.masks_for(E_all.shape[1:], pos, seeds)
-        E = aggregation.blind_and_aggregate(
-            E_all, None if masks is None or self.easter.mask_mode == "int32"
-            else masks)
+        E_all, E = self._aggregate(jnp.stack(Es),
+                                   blinding.SERVE_DOMAIN + pos, seeds)
         logits = self.decide(params["parties"][0], self.party_cfgs[0],
                              E.astype(E_all.dtype))
         return logits, new_caches
 
     def prefill(self, params, tokens, caches, window_override: int = -1,
-                fe_list=None):
-        """Cache-building forward over the prompt; returns (E, caches)."""
+                fe_list=None, seeds=None, round_idx=0):
+        """Cache-building forward over the prompt; returns (E, caches).
+
+        The prompt-phase uplink crosses the same trust boundary as every
+        other round, so it is blinded through _aggregate like training and
+        decode (a previous version aggregated RAW passive embeddings with
+        a bare jnp.mean). ``seeds=None`` keeps the unblinded oracle used by
+        parity tests.
+
+        ``round_idx`` is a per-REQUEST nonce: with fresh_masks (the
+        default), two prefills blinded under the same round reuse the
+        pairwise one-time pads, letting the active party subtract the
+        blinded uplinks and recover exact embedding differences — serving
+        callers must supply a fresh nonce per request (see
+        launch/steps.build_prefill_step). Internally offset by
+        PREFILL_DOMAIN so prompt masks never coincide with training-round
+        or decode-step masks (fresh_masks=False deliberately collapses
+        all of this to the paper's single static pad)."""
         Es, new_caches = [], []
         for k, pcfg in enumerate(self.party_cfgs):
             fe = fe_list[k] if fe_list else {}
@@ -281,7 +322,8 @@ class EasterLM:
                 window_override=window_override, **fe)
             Es.append(E_k)
             new_caches.append(nc)
-        E = jnp.mean(jnp.stack(Es), axis=0)
+        _, E = self._aggregate(jnp.stack(Es),
+                               blinding.PREFILL_DOMAIN + round_idx, seeds)
         return E, new_caches
 
     def encoder_kv(self, params, audio_embed):

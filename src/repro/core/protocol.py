@@ -57,6 +57,10 @@ class EasterClassifier:
     grad_mode: str = "easter"           # easter (paper) | joint (beyond)
     engine: str = "vectorized"          # vectorized (grouped vmap) | loop
     use_kernel: bool = False            # fused Pallas blind_agg aggregation
+    # synthesize masks inside the Pallas kernel (pltpu PRNG) instead of
+    # materializing the (K, B, d) tensor: float mode only; off-TPU falls
+    # back to the MaskEngine graph path (see aggregation).
+    fused_masks: bool = False
     # beyond-paper ablation: C_VFL-style top-k sparsification of the
     # UPLINK embeddings (values+indices wire format), straight-through
     # gradients. 0 = off (paper). Composes with blinding: masks are
@@ -72,8 +76,22 @@ class EasterClassifier:
         if self.K > 1:
             self.keys, self.seeds = blinding.setup_passive_parties(
                 self.K, deterministic_seed=7)
+            self.mask_engine = blinding.MaskEngine.from_seeds(self.K,
+                                                              self.seeds)
         else:
             self.keys, self.seeds = [], {}
+            self.mask_engine = None
+        if self.fused_masks:
+            assert self.easter.mask_mode == "float", \
+                "fused (in-kernel) mask synthesis is float-mode only"
+            assert self.engine == "vectorized", \
+                "fused mask synthesis requires the vectorized engine"
+        # ring masks are dense, so a top-k-sparsified uplink saves no wire
+        # bytes in int32 mode (see bytes_per_round) — the combination would
+        # pay sparsification accuracy loss for nothing; reject it
+        assert not (self.compress_frac > 0
+                    and self.easter.mask_mode == "int32"), \
+            "compress_frac has no wire benefit under int32 ring masking"
 
     # -- params ------------------------------------------------------------
     def init_params(self, key) -> List[dict]:
@@ -83,10 +101,17 @@ class EasterClassifier:
 
     # -- protocol steps ----------------------------------------------------
     def masks(self, batch: int, round_idx: int = 0):
+        """Per-round masks: a (K, B, d) tensor (engine-synthesized or the
+        loop oracle), or a FusedMasks marker when synthesis is deferred to
+        the Pallas kernel."""
         if self.K < 2 or not self.easter.enabled:
             return None
-        shape = (batch, self.easter.d_embed)
         r = round_idx if self.easter.fresh_masks else 0
+        if self.fused_masks:
+            return blinding.FusedMasks(jnp.asarray(r, jnp.int32))
+        shape = (batch, self.easter.d_embed)
+        if self.engine == "vectorized":
+            return self.mask_engine.masks(shape, r, self.easter.mask_mode)
         return blinding.all_party_masks(self.K, self.seeds, shape, r,
                                         self.easter.mask_mode)
 
@@ -105,6 +130,9 @@ class EasterClassifier:
         return E_all
 
     def global_embed(self, E_all: jnp.ndarray, masks) -> jnp.ndarray:
+        if isinstance(masks, blinding.FusedMasks):
+            return aggregation.blind_and_aggregate_fused(
+                E_all, self.mask_engine, masks.round_idx)
         if masks is not None and self.easter.mask_mode == "int32":
             return aggregation.aggregate_int32(E_all, masks)
         return aggregation.blind_and_aggregate(E_all, masks,
@@ -226,11 +254,21 @@ class EasterClassifier:
     def bytes_per_round(self, batch: int) -> int:
         """Wire bytes per training round (paper Table V accounting):
         blinded embeddings up + global embedding down + predictions up +
-        loss signal down (fp32)."""
+        loss signal down.
+
+        Wire format depends on mask_mode: float mode ships fp32 blinded
+        embeddings (4 B/elt) and composes with top-k compression
+        (values + int32 indices). int32 ring mode ships Z_2^32 ring
+        elements (4 B/elt) — and because ring masks are DENSE, top-k
+        sparsification cannot shrink the blinded uplink (a sparse wire
+        would reveal which coordinates were masked-only), so the
+        compress_frac discount does not apply there.
+        """
         d_e = self.easter.d_embed
         n_cls = self.arches[0].n_classes
-        up_e = self.K * batch * d_e * 4
-        if self.compress_frac > 0:
+        elt = 4  # fp32 and int32 ring elements are both 4-byte words
+        up_e = self.K * batch * d_e * elt
+        if self.compress_frac > 0 and self.easter.mask_mode != "int32":
             up_e = int(up_e * self.compress_frac * 2)  # values + indices
         down_e = self.K * batch * d_e * 4
         up_r = self.K * batch * n_cls * 4

@@ -64,9 +64,10 @@ def _passive_party_main(conn, party_idx: int, arch_bytes, n_features: int,
             E, vjp_e = jax.vjp(lambda pp: embed_fn(pp, arch, x), params)
             mask = jnp.zeros_like(E)
             for j, seed_j in pair_seeds.items():
-                m = jax.random.normal(
-                    jax.random.fold_in(jax.random.PRNGKey(seed_j % 2 ** 31),
-                                       round_idx), E.shape, jnp.float32)
+                # full-63-bit-seed PRF shared with the SPMD paths: both
+                # ends of a pair must derive the identical array for
+                # cancellation across trust domains
+                m = blinding.pair_mask(seed_j, E.shape, round_idx)
                 mask = mask + (m if my_idx < j else -m)
             state["E"], state["vjp_e"] = E, vjp_e
             conn.send(("blinded_embed", np.asarray(E + mask)))

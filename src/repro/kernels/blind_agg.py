@@ -23,6 +23,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -152,4 +153,173 @@ def blind_agg(E_active: jnp.ndarray, E_passive: jnp.ndarray,
     mk = masks.reshape(K, N, d)
     out = _blind_agg(ea, ep, mk, (ep.dtype, mk.dtype), block_n, block_d,
                      block_k, interpret, int(K))
+    return out.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# pltpu-PRNG variant: in-kernel mask synthesis (no (K, N, d) mask HBM tensor)
+# ---------------------------------------------------------------------------
+
+
+def _prng_fwd_kernel(rnd_ref, sh_ref, sl_ref, sg_ref, ea_ref, ep_ref, o_ref,
+                     acc_ref, *, inv_c: float, gk: int, n_pairs: int,
+                     scale: float):
+    """Blind + aggregate with masks generated by the per-core TPU PRNG.
+
+    For each party row p of the slab, its Eq. 5 mask is re-derived pair by
+    pair: the PRNG is seeded from (pair seed words, round, tile coords), so
+    BOTH endpoints of a pair emit the identical (bn, bd) stream for a given
+    output tile and their ±1-signed contributions cancel in the fp32
+    accumulator — the mask tensor never exists outside VMEM/registers.
+    Masks are uniform on [-scale/2, scale/2) via the mantissa bitcast trick
+    (distribution differs from the HBM path's normals; cancellation — the
+    protocol invariant — is what tests pin down).
+    """
+    ii, jj, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    ep = ep_ref[...].astype(jnp.float32)            # (bk, bn, bd)
+    bk, bn, bd = ep.shape
+    part = jnp.sum(ep, axis=0)
+    for p in range(bk):                             # static party unroll
+
+        def pair_body(j, acc, p=p):
+            # rnd arrives as two f32 words (each < 2^16, exact in f32) so
+            # SERVE/PREFILL_DOMAIN offsets >= 2^30 survive the float ride
+            pltpu.prng_seed(sh_ref[p, j], sl_ref[p, j],
+                            rnd_ref[0].astype(jnp.int32),
+                            rnd_ref[1].astype(jnp.int32), ii, jj)
+            bits = pltpu.bitcast(pltpu.prng_random_bits((bn, bd)),
+                                 jnp.uint32)
+            # mantissa trick: top 23 random bits -> f32 in [1, 2), recenter
+            u = pltpu.bitcast((bits >> 9) | jnp.uint32(0x3F800000),
+                              jnp.float32) - 1.5
+            s = sg_ref[p, j].astype(jnp.float32) * scale
+            return acc + s * u
+
+        part = jax.lax.fori_loop(0, n_pairs, pair_body, part)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = ea_ref[...].astype(jnp.float32) + part
+
+    @pl.when(kk > 0)
+    def _acc():
+        acc_ref[...] += part
+
+    @pl.when(kk == gk - 1)
+    def _fin():
+        o_ref[...] = (acc_ref[...] * inv_c).astype(o_ref.dtype)
+
+
+def make_prng_blind_agg(seed_hi, seed_lo, signs, *, block_n: int = 256,
+                        block_d: int = 128, block_k: int = 8,
+                        mask_scale: float = 1.0, interpret: bool = False):
+    """Build a fused blind+aggregate fn with IN-KERNEL mask synthesis.
+
+    seed_hi/seed_lo/signs: host (K, K-1) arrays — the MaskEngine's packed
+    pair-seed layout. They are baked into the returned callable as
+    compile-time constants (SMEM operands), exactly like the federation's
+    DH ceremony fixes them once.
+
+    Returns ``fn(ea (N, d), ep (K, N, d), rnd_words_f32 (2,)) -> (N, d)``
+    carrying a custom VJP (aggregation is linear; masks are seed-derived
+    constants, so the backward pass is the same fused gE/C broadcast
+    kernel as blind_agg). The round index travels as two f32 words, each
+    < 2^16 and therefore exact in f32 (a single f32 scalar would silently
+    round the >= 2^30 SERVE/PREFILL_DOMAIN offsets, collapsing distinct
+    rounds onto one PRNG stream) — floats so every differentiable
+    argument has a float cotangent; use ``round_words`` to build them.
+
+    TPU-only numerics: ``pltpu.prng_*`` has no CPU interpret rule in this
+    jax version — off-TPU callers use ops.blind_agg_prng, which falls back
+    to the MaskEngine graph path.
+    """
+    seed_hi = np.ascontiguousarray(seed_hi, np.uint32)
+    seed_lo = np.ascontiguousarray(seed_lo, np.uint32)
+    signs = np.ascontiguousarray(signs, np.int32)
+    K, n_pairs = seed_hi.shape
+
+    @jax.custom_vjp
+    def fused(ea, ep, rnd_words_f32):
+        N, d = ea.shape
+        bn, bd, bk = _blocks(N, d, K, block_n, block_d, block_k)
+        grid = (N // bn, d // bd, K // bk)
+        rnd = jnp.asarray(rnd_words_f32, jnp.float32).reshape(2)
+        smem = lambda spec_shape, idx: pl.BlockSpec(
+            spec_shape, idx, memory_space=pltpu.SMEM)
+        return pl.pallas_call(
+            functools.partial(_prng_fwd_kernel, inv_c=1.0 / (K + 1),
+                              gk=K // bk, n_pairs=n_pairs,
+                              scale=float(mask_scale)),
+            grid=grid,
+            in_specs=[
+                smem((2,), lambda i, j, k: (0,)),
+                smem((bk, n_pairs), lambda i, j, k: (k, 0)),
+                smem((bk, n_pairs), lambda i, j, k: (k, 0)),
+                smem((bk, n_pairs), lambda i, j, k: (k, 0)),
+                pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+                pl.BlockSpec((bk, bn, bd), lambda i, j, k: (k, i, j)),
+            ],
+            out_specs=pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((N, d), ea.dtype),
+            scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+            interpret=interpret,
+        )(rnd, jnp.asarray(seed_hi), jnp.asarray(seed_lo),
+          jnp.asarray(signs), ea, ep)
+
+    def fused_fwd(ea, ep, rnd_words_f32):
+        # scalar zero residual only carries ep's dtype for the cotangent aval
+        return fused(ea, ep, rnd_words_f32), jnp.zeros((), ep.dtype)
+
+    def fused_bwd(res, g):
+        N, d = g.shape
+        bn, bd, bk = _blocks(N, d, K, block_n, block_d, block_k)
+        grid = (N // bn, d // bd, K // bk)
+        dea, dep = pl.pallas_call(
+            functools.partial(_bwd_kernel, inv_c=1.0 / (K + 1)),
+            grid=grid,
+            in_specs=[pl.BlockSpec((bn, bd), lambda i, j, k: (i, j))],
+            out_specs=[
+                pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+                pl.BlockSpec((bk, bn, bd), lambda i, j, k: (k, i, j)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((N, d), g.dtype),
+                jax.ShapeDtypeStruct((K, N, d), res.dtype),
+            ],
+            interpret=interpret,
+        )(g)
+        return dea.astype(g.dtype), dep, jnp.zeros((2,), jnp.float32)
+
+    fused.defvjp(fused_fwd, fused_bwd)
+    return fused
+
+
+def round_words(round_idx) -> jnp.ndarray:
+    """Split a round index (< 2^31) into two f32 words, each < 2^16 and
+    therefore exactly representable — the wire format make_prng_blind_agg
+    expects for its round argument."""
+    r = jnp.asarray(round_idx, jnp.int32)
+    return jnp.stack([(r >> 15).astype(jnp.float32),
+                      (r & 0x7FFF).astype(jnp.float32)])
+
+
+def prng_blind_agg(E_active: jnp.ndarray, E_passive: jnp.ndarray, engine,
+                   round_idx, *, mask_scale: float = 1.0,
+                   block_n: int = 256, block_d: int = 128, block_k: int = 8,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Fused blind+aggregate from a blinding.MaskEngine's seed layout.
+
+    E_active (..., d); E_passive (K, ..., d). Masks are synthesized inside
+    the kernel (see make_prng_blind_agg) — no (K, ..., d) mask HBM tensor.
+    """
+    K = E_passive.shape[0]
+    orig_shape = E_active.shape
+    d = orig_shape[-1]
+    N = E_active.size // d
+    fn = make_prng_blind_agg(engine.seed_hi, engine.seed_lo, engine.signs,
+                             block_n=block_n, block_d=block_d,
+                             block_k=block_k, mask_scale=mask_scale,
+                             interpret=interpret)
+    out = fn(E_active.reshape(N, d), E_passive.reshape(K, N, d),
+             round_words(round_idx))
     return out.reshape(orig_shape)

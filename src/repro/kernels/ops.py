@@ -37,6 +37,29 @@ def blind_agg(E_active, E_passive, masks, *, block_n: int = 256,
                          interpret=not _on_tpu())
 
 
+def blind_agg_prng(E_active, E_passive, engine, round_idx, *,
+                   mask_scale: float = 1.0, block_n: int = 256,
+                   block_d: int = 128, block_k: int = 8):
+    """Fused blind+aggregate with IN-KERNEL pltpu-PRNG mask synthesis.
+
+    ``engine`` is a blinding.MaskEngine (host-constant seed layout), so
+    this is a plain function — jit it via the enclosing step. On TPU the
+    (K, ..., d) mask tensor never exists in HBM; off-TPU (pltpu.prng_* has
+    no interpret rule) masks are synthesized by the MaskEngine graph path
+    and combined by the compiled jnp equivalent of the kernel — same
+    cancellation semantics, different PRF bit-stream. (Deliberately NOT
+    the interpret-mode kernel: Python tile emulation is for parity tests,
+    not a production fallback.)"""
+    if _on_tpu():
+        return _ba.prng_blind_agg(E_active, E_passive, engine, round_idx,
+                                  mask_scale=mask_scale, block_n=block_n,
+                                  block_d=block_d, block_k=block_k)
+    masks = engine.masks(E_passive.shape[1:], round_idx, "float",
+                         scale=mask_scale).astype(E_passive.dtype)
+    C = E_passive.shape[0] + 1
+    return (E_active + jnp.sum(E_passive + masks, axis=0)) / C
+
+
 @partial(jax.jit, static_argnames=("block_b", "block_w", "chunk"))
 def rglru_scan(a, b, h0, *, block_b: int = 8, block_w: int = 128,
                chunk: int = 64):

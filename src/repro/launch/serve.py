@@ -45,7 +45,11 @@ def main():
 
     caches = sys_.init_caches(B, total)
     t0 = time.perf_counter()
-    _, caches = jax.jit(sys_.prefill)(params, prompt, caches)
+    # per-request nonce: fresh-mask prefills must never share a round
+    prefill = jax.jit(lambda p, t, c, n: sys_.prefill(p, t, c, seeds=seeds,
+                                                      round_idx=n))
+    _, caches = prefill(params, prompt, caches,
+                        jnp.asarray(args.seed, jnp.int32))
     jax.block_until_ready(jax.tree.leaves(caches)[0])
     t_prefill = time.perf_counter() - t0
 

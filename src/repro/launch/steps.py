@@ -134,15 +134,22 @@ def build_serve_step(sys: EasterLM, shape: InputShape):
 
 
 def build_prefill_step(sys: EasterLM, shape: InputShape):
+    seeds = sys.mask_seeds()
     wo = _long_ctx_override(sys.cfg, shape)
 
-    def prefill_step(params, batch):
+    def prefill_step(params, batch, round_idx=0):
+        # round_idx: per-REQUEST nonce — production serving must pass a
+        # fresh (traced int32) value per request, or fresh-mask prefills
+        # reuse the pairwise one-time pads across requests (see
+        # EasterLM.prefill). The default keeps the dry-run's 2-arg
+        # lowering signature.
         B, S = batch["tokens"].shape
         fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
         fe_list = [dict(fe) for _ in range(sys.C)] if fe else None
         caches = sys.init_caches(B, S, wo)
         E, new_caches = sys.prefill(params, batch["tokens"], caches,
-                                    window_override=wo, fe_list=fe_list)
+                                    window_override=wo, fe_list=fe_list,
+                                    seeds=seeds, round_idx=round_idx)
         return E, new_caches
 
     return prefill_step

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import EasterConfig, get_config, smoke_variant
+from repro.core import aggregation, blinding
 from repro.core.easter_lm import EasterLM, passive_cfg
 from repro.launch import steps as steps_mod
 
@@ -126,6 +127,145 @@ def test_serve_step_nondense_families(arch):
                                     jnp.asarray(S - 1, jnp.int32), None)
     assert logits.shape == (B, 1, sys.cfg.vocab_size)
     assert bool(jnp.isfinite(logits).all())
+
+
+# ---------------------------------------------------------------------------
+# serve/prefill transcript audit: the active party must never observe an
+# unblinded passive embedding at inference time, in ANY mask_mode
+# (regressions: serve_step used to drop masks entirely when
+# mask_mode="int32", and prefill aggregated raw embeddings with jnp.mean)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "loop"])
+@pytest.mark.parametrize("mask_mode", ["float", "int32"])
+def test_serve_prefill_transcript_blinded(mask_mode, engine, monkeypatch):
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1,
+                     mask_mode=mask_mode)
+    sys = EasterLM(cfg=cfg, easter=e, engine=engine)
+    params = sys.init_params(jax.random.PRNGKey(7))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(8), (B, S), 0,
+                              cfg.vocab_size)
+    seeds = sys.mask_seeds()
+    assert seeds is not None
+
+    transcript = []
+    orig_blind = aggregation.blind_and_aggregate
+    orig_int32 = aggregation.aggregate_int32
+
+    def spy_blind(E_all, masks, **kw):
+        transcript.append(("float", E_all, masks))
+        return orig_blind(E_all, masks, **kw)
+
+    def spy_int32(E_all, masks):
+        transcript.append(("int32", E_all, masks))
+        return orig_int32(E_all, masks)
+
+    monkeypatch.setattr(aggregation, "blind_and_aggregate", spy_blind)
+    monkeypatch.setattr(aggregation, "aggregate_int32", spy_int32)
+
+    caches = sys.init_caches(B, S)
+    _, caches = sys.prefill(params, toks[:, :S - 1], caches, seeds=seeds)
+    logits, _ = sys.serve_step(params, toks[:, S - 1:], caches,
+                               jnp.asarray(S - 1, jnp.int32), seeds)
+    assert bool(jnp.isfinite(logits).all())
+
+    assert len(transcript) == 2, "prefill and serve must both aggregate"
+    for kind, E_all, masks in transcript:
+        # int32 mode MUST route through the ring aggregator; float through
+        # the blinded mean — and always with masks attached
+        assert kind == ("int32" if mask_mode == "int32" else "float")
+        assert masks is not None, "unblinded aggregation on the serve path"
+        # the wire payload the active party observes is [E_k] = E_k + r_k
+        if kind == "float":
+            wire = np.asarray(E_all[1:] + masks)
+            raw = np.asarray(E_all[1:])
+            np.testing.assert_allclose(          # masks cancel (Eq. 5)...
+                np.asarray(masks).sum(0), 0.0, atol=1e-4)
+        else:
+            raw = np.asarray(blinding.quantize(E_all[1:]))
+            wire = raw + np.asarray(masks)       # numpy int32 wrap-add
+            # masks cancel exactly in the ring Z_2^32
+            ring_sum = np.asarray(masks).astype(np.int64).sum(0) % (2 ** 32)
+            assert np.all(ring_sum == 0)
+        # ...but each party's payload is NOT its raw embedding
+        for k in range(wire.shape[0]):
+            delta = np.abs(wire[k].astype(np.float64)
+                           - raw[k].astype(np.float64))
+            assert delta.max() > 0.5, \
+                f"party {k + 1} raw embedding visible to the active party"
+
+
+@pytest.mark.parametrize("mask_mode", ["float", "int32"])
+def test_serve_prefill_blinding_invariance(mask_mode):
+    """Blinded serve/prefill reproduce the unblinded oracle outputs —
+    masks change what crosses the trust boundary, never the result."""
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1,
+                     mask_mode=mask_mode)
+    sys = EasterLM(cfg=cfg, easter=e)
+    params = sys.init_params(jax.random.PRNGKey(9))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(10), (B, S), 0,
+                              cfg.vocab_size)
+    seeds = sys.mask_seeds()
+    pos = jnp.asarray(S - 1, jnp.int32)
+
+    caches_b = sys.init_caches(B, S)
+    E_b, caches_b = sys.prefill(params, toks[:, :S - 1], caches_b,
+                                seeds=seeds)
+    logits_b, _ = sys.serve_step(params, toks[:, S - 1:], caches_b, pos,
+                                 seeds)
+    caches_p = sys.init_caches(B, S)
+    E_p, caches_p = sys.prefill(params, toks[:, :S - 1], caches_p)
+    logits_p, _ = sys.serve_step(params, toks[:, S - 1:], caches_p, pos,
+                                 None)
+    tol = 5e-2 if mask_mode == "int32" else 1e-3
+    np.testing.assert_allclose(np.asarray(E_b), np.asarray(E_p), atol=tol)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_p),
+                               atol=tol)
+
+
+def test_serve_prefill_mask_domains_never_reuse_pads(monkeypatch):
+    """One-time-pad discipline at inference: prefills with different
+    request nonces, decode steps, and training rounds must all draw
+    DISTINCT masks for the same embedding shape (a prior version hardwired
+    prefill to round 0, so every request reused the same pad and the
+    active party could subtract two uplinks to recover exact embedding
+    differences)."""
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1)
+    sys = EasterLM(cfg=cfg, easter=e)
+    params = sys.init_params(jax.random.PRNGKey(11))
+    B = 2
+    tok = jax.random.randint(jax.random.PRNGKey(12), (B, 1), 0,
+                             cfg.vocab_size)
+    seeds = sys.mask_seeds()
+
+    captured = []
+    orig = aggregation.blind_and_aggregate
+
+    def spy(E_all, masks, **kw):
+        captured.append(np.asarray(masks))
+        return orig(E_all, masks, **kw)
+
+    monkeypatch.setattr(aggregation, "blind_and_aggregate", spy)
+    # two prefills of the SAME 1-token prompt under different nonces, one
+    # decode step at pos 0, and the training-round-0 masks — same shape
+    sys.prefill(params, tok, sys.init_caches(B, 1), seeds=seeds,
+                round_idx=0)
+    sys.prefill(params, tok, sys.init_caches(B, 1), seeds=seeds,
+                round_idx=1)
+    sys.serve_step(params, tok, sys.init_caches(B, 1),
+                   jnp.asarray(0, jnp.int32), seeds)
+    train_m = np.asarray(sys.masks_for((B, 1, 64), 0, seeds))
+    all_masks = captured + [train_m]
+    assert len(all_masks) == 4
+    for i in range(len(all_masks)):
+        for j in range(i + 1, len(all_masks)):
+            assert not np.allclose(all_masks[i], all_masks[j]), (i, j)
 
 
 def test_int32_mode_close_to_float():

@@ -137,6 +137,79 @@ def test_blind_agg_higher_rank_batch_dims():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# pltpu-PRNG fused variant (in-kernel mask synthesis)
+# ---------------------------------------------------------------------------
+
+
+def _engine(K, seed=3):
+    from repro.core import blinding
+    return blinding.setup_mask_engine(K, deterministic_seed=seed)
+
+
+def test_blind_agg_prng_traces_with_vjp():
+    """The fused-PRNG kernel and its custom VJP must trace/abstract-eval
+    (pltpu.prng_* has no CPU interpret rule in this jax version, so
+    numerics are TPU-only; this pins the program structure)."""
+    from repro.kernels.blind_agg import make_prng_blind_agg, round_words
+    eng = _engine(4)
+    fn = make_prng_blind_agg(eng.seed_hi, eng.seed_lo, eng.signs)
+    ea = jnp.zeros((32, 64))
+    ep = jnp.zeros((4, 32, 64))
+    rw = round_words(0)
+    out = jax.eval_shape(fn, ea, ep, rw)
+    assert (out.shape, out.dtype) == ((32, 64), jnp.float32)
+    g = jax.eval_shape(jax.grad(
+        lambda a, p: fn(a, p, rw).sum(), argnums=(0, 1)), ea, ep)
+    assert g[0].shape == (32, 64) and g[1].shape == (4, 32, 64)
+
+
+def test_round_words_exact_for_domain_offsets():
+    """The f32 round wire format must carry SERVE/PREFILL_DOMAIN-offset
+    rounds (>= 2^30) without rounding — a single f32 scalar would collapse
+    neighbouring decode positions onto one PRNG stream."""
+    from repro.core import blinding
+    from repro.kernels.blind_agg import round_words
+    for r in (0, 7, blinding.SERVE_DOMAIN + 1, blinding.SERVE_DOMAIN + 2,
+              blinding.PREFILL_DOMAIN + 12345):
+        hi, lo = np.asarray(round_words(r))
+        assert hi < 2 ** 16 and lo < 2 ** 16          # exact in f32
+        assert (int(hi) << 15) | int(lo) == r
+
+
+def test_blind_agg_prng_fallback_cancels_and_grads():
+    """Off-TPU, ops.blind_agg_prng synthesizes masks via the MaskEngine and
+    still aggregates to the plain mean (cancellation), with the linear
+    1/C pullback intact."""
+    eng = _engine(4)
+    key = jax.random.PRNGKey(31)
+    Ea = jax.random.normal(key, (16, 32))
+    Ep = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, 32))
+    got = ops.blind_agg_prng(Ea, Ep, eng, 0)
+    want = (Ea + Ep.sum(0)) / 5.0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # round separation flows through to the synthesized masks, not the agg
+    got_r1 = ops.blind_agg_prng(Ea, Ep, eng, 1)
+    np.testing.assert_allclose(np.asarray(got_r1), np.asarray(want),
+                               atol=1e-5)
+    g = jax.grad(lambda ea: jnp.sum(ops.blind_agg_prng(ea, Ep, eng, 0)))(Ea)
+    np.testing.assert_allclose(np.asarray(g), np.full((16, 32), 1 / 5.0),
+                               atol=1e-6)
+
+
+def test_blind_agg_prng_higher_rank_and_jit():
+    """(B, S, d) layout + traced round index under jit (the serve path)."""
+    eng = _engine(3)
+    key = jax.random.PRNGKey(37)
+    Ea = jax.random.normal(key, (2, 5, 16))
+    Ep = jax.random.normal(jax.random.fold_in(key, 1), (3, 2, 5, 16))
+    f = jax.jit(lambda r: ops.blind_agg_prng(Ea, Ep, eng, r))
+    got = f(jnp.asarray(7, jnp.int32))
+    want = (Ea + Ep.sum(0)) / 4.0
+    assert got.shape == (2, 5, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 @pytest.mark.parametrize("B,L,W,chunk", [
     (2, 64, 128, 16), (1, 128, 256, 64), (4, 32, 64, 32), (3, 96, 128, 32),
 ])

@@ -221,6 +221,45 @@ def test_kernel_aggregation_path_matches_reference(grad_mode):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+def test_classifier_mask_engines_agree_bitexact():
+    """EasterClassifier(engine="vectorized") synthesizes masks with the
+    batched MaskEngine; engine="loop" uses the per-party double loop. Same
+    DH ceremony (deterministic_seed) => bit-identical masks."""
+    for mode in ("float", "int32"):
+        sv = _make_sys(mask_mode=mode, engine="vectorized")
+        sl = _make_sys(mask_mode=mode, engine="loop")
+        for r in (0, 2):
+            np.testing.assert_array_equal(np.asarray(sv.masks(6, r)),
+                                          np.asarray(sl.masks(6, r)))
+
+
+def test_fused_mask_synthesis_matches_plain():
+    """fused_masks=True routes aggregation through the in-kernel PRNG
+    variant (MaskEngine fallback off-TPU): losses/grads must match the
+    unmasked oracle (cancellation), with the FusedMasks marker crossing
+    the jitted train-step boundary."""
+    from repro.core import blinding
+
+    sys_f = _make_sys()
+    sys_f.fused_masks = True
+    sys_p = _make_sys()
+    params = sys_f.init_params(jax.random.PRNGKey(8))
+    xs, y = _batch(sys_f)
+    m = sys_f.masks(6, 0)
+    assert isinstance(m, blinding.FusedMasks)
+    lf, _ = sys_f.loss_fn(params, xs, y, m)
+    lp, _ = sys_p.loss_fn(params, xs, y, None)
+    np.testing.assert_allclose(float(lf), float(lp), atol=1e-4)
+    gf = jax.grad(lambda p: sys_f.loss_fn(p, xs, y, m)[0])(params)
+    gp = jax.grad(lambda p: sys_p.loss_fn(p, xs, y, None)[0])(params)
+    for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    # the marker is a pytree: it rides the jitted step like a mask tensor
+    init_opt, step = sys_f.make_train_step("adam", 1e-3)
+    out = step(params, init_opt(params), xs, y, m)
+    assert np.isfinite(float(out[2]))
+
+
 def test_split_features_partition():
     x = jnp.arange(24.0).reshape(2, 12)
     parts = split_features(x, 5)
