@@ -8,6 +8,9 @@ synthetic vertically-split features, comparing:
 
   * engine=vectorized — grouped-vmap engine (O(#groups) XLA ops) + the
                         batched MaskEngine (O(1) traced mask-synthesis ops)
+  * engine=sharded    — grouped-vmap engine laid out over a "party" mesh
+                        axis with shard_map (needs >1 local device, e.g.
+                        XLA_FLAGS=--xla_force_host_platform_device_count=4)
   * engine=loop       — the seed's per-party Python loop (O(C) ops) and the
                         O(C^2) pairwise mask loop;
                         skipped above --loop-max-c (trace time explodes)
@@ -22,9 +25,18 @@ cost lands here) and ``mask_ms`` (steady-state jitted synthesis with a
 fresh round index). ``--mask-only`` skips the training-round timing, for
 sweeping mask synthesis to C=128 on both engines cheaply.
 
+``--save`` writes the tracked perf-dashboard document (schema
+``easter/many-party-bench/v1``): per-C round/mask timings + wire
+bytes/round, plus a host-speed calibration scalar so the CI gate
+(``benchmarks/compare.py``, committed baseline
+``benchmarks/BENCH_many_party.json``) can normalize across runner speeds.
+``--gate`` is the exact preset the CI perf-gate job sweeps.
+
 Usage:
     PYTHONPATH=src python benchmarks/many_party_scaling.py          # full
     PYTHONPATH=src python benchmarks/many_party_scaling.py --smoke  # C=64
+    PYTHONPATH=src python benchmarks/many_party_scaling.py \
+        --gate --save experiments/bench/BENCH_many_party.json  # CI sweep
     PYTHONPATH=src python benchmarks/many_party_scaling.py \
         --mask-only --cs 128 --engine both --loop-max-c 128  # tentpole check
 """
@@ -87,11 +99,15 @@ def time_masks(sys, batch: int, rounds: int = 5) -> dict:
     m = f(jnp.asarray(0, jnp.int32))
     jax.block_until_ready(m)
     first = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    for r in range(1, rounds + 1):
-        m = f(jnp.asarray(r, jnp.int32))
-    jax.block_until_ready(m)
-    dt = (time.perf_counter() - t0) / rounds
+    # best-of-3 timed loops: the steady-state column feeds the CI perf
+    # gate, so one scheduler spike must not fabricate a regression
+    dt = float("inf")
+    for rep in range(3):
+        t0 = time.perf_counter()
+        for r in range(1, rounds + 1):
+            m = f(jnp.asarray(rep * rounds + r, jnp.int32))
+        jax.block_until_ready(m)
+        dt = min(dt, (time.perf_counter() - t0) / rounds)
     return {"mask_first_ms": first * 1e3, "mask_ms": dt * 1e3}
 
 
@@ -109,49 +125,138 @@ def time_rounds(sys, nf, batch: int, rounds: int, seed: int = 0) -> dict:
     out = step(params, opt_state, xs, y, masks)       # compile + warmup
     jax.block_until_ready(out[2])
     trace_s = time.perf_counter() - t_trace
-    t0 = time.perf_counter()
-    for _ in range(rounds):
-        params, opt_state, total, per = step(params, opt_state, xs, y, masks)
-    jax.block_until_ready(total)
-    dt = (time.perf_counter() - t0) / rounds
+    # best-of-3 timed loops (see time_masks): gated metric, spike-robust
+    dt = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            params, opt_state, total, per = step(params, opt_state, xs, y,
+                                                 masks)
+        jax.block_until_ready(total)
+        dt = min(dt, (time.perf_counter() - t0) / rounds)
     return {"round_ms": dt * 1e3, "compile_s": trace_s,
             "rounds_per_s": 1.0 / dt, "loss": float(total),
             "n_groups": sys._eng.n_groups}
 
 
+SCHEMA = "easter/many-party-bench/v1"
+
+
+def calibration_ms(reps: int = 50) -> float:
+    """Host-speed probe: MIN ms of a jitted 1024x1024 fp32 matmul.
+
+    Stored alongside the timing rows so ``compare.py`` can normalize a
+    run on a fast dev box against a baseline captured on a slow CI
+    runner (and vice versa) before applying the regression threshold.
+    Min over many single-shot reps — the fastest observation estimates
+    hardware capability and is by far the most stable statistic under
+    scheduler noise; a mean/median would inject its own jitter into
+    EVERY normalized ratio the gate checks.
+    """
+    x = jnp.ones((1024, 1024), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    for _ in range(5):
+        jax.block_until_ready(f(x))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+_MIN_MERGE = ("setup_s", "mask_first_ms", "mask_ms", "round_ms",
+              "compile_s", "cal_ms")
+
+
+def _merge_min(prev: dict, new: dict) -> dict:
+    """Per-metric min across repeated sweeps of the same cell: shared
+    hosts drift between speed regimes for minutes at a time, so two
+    samples of a cell taken a sweep apart beat any within-cell
+    statistic. The fastest observation is the capability estimate."""
+    out = dict(prev)
+    for k in _MIN_MERGE:
+        if k in prev and k in new:
+            out[k] = min(prev[k], new[k])
+    if "round_ms" in out and out["round_ms"] > 0:
+        out["rounds_per_s"] = 1e3 / out["round_ms"]
+    return out
+
+
 def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
         mask_mode, loop_max_c, fused_masks=False, mask_only=False,
-        save=None):
-    rows = []
-    for C in cs:
-        for eng in engines:
-            if eng == "loop" and C > loop_max_c:
-                print(f"many_party C={C} engine=loop skipped "
-                      f"(> --loop-max-c {loop_max_c})")
-                continue
-            fused_eff = fused_masks and eng == "vectorized"
-            sys, nf, setup_s = build(C, n_feat_total, d_embed, 10, eng,
-                                     use_kernel, mask_mode, fused_eff)
-            r = {"C": C, "engine": eng, "batch": batch,
-                 "use_kernel": use_kernel, "fused_masks": fused_eff,
-                 "setup_s": setup_s}
-            r.update(time_masks(sys, batch))
-            if not mask_only:
-                r.update(time_rounds(sys, nf, batch, rounds))
-            rows.append(r)
-            round_txt = ("" if mask_only else
-                         f"round {r['round_ms']:8.2f} ms  "
-                         f"compile {r['compile_s']:6.1f} s  "
-                         f"loss {r['loss']:.3f}  ")
-            print(f"many_party C={C:4d} engine={eng:10s} "
-                  f"{round_txt}"
-                  f"ceremony {setup_s:5.1f} s  "
-                  f"mask_first {r['mask_first_ms']:9.1f} ms  "
-                  f"mask {r['mask_ms']:7.2f} ms")
+        save=None, repeat=1):
+    merged = {}
+    for rep in range(repeat):
+        for C in cs:
+            for eng in engines:
+                if eng == "loop" and C > loop_max_c:
+                    print(f"many_party C={C} engine=loop skipped "
+                          f"(> --loop-max-c {loop_max_c})")
+                    continue
+                fused_eff = fused_masks and eng == "vectorized"
+                sys, nf, setup_s = build(C, n_feat_total, d_embed, 10, eng,
+                                         use_kernel, mask_mode, fused_eff)
+                r = {"C": C, "engine": eng, "batch": batch,
+                     "use_kernel": use_kernel, "fused_masks": fused_eff,
+                     "setup_s": setup_s,
+                     "bytes_per_round": sys.bytes_per_round(batch)}
+                if eng == "sharded":
+                    # record what actually ran: on a 1-device host (or
+                    # when no group divides the axis) the sharded engine
+                    # degrades to plain vmap — don't let a dashboard row
+                    # labeled "sharded" pass off vectorized numbers
+                    from repro import sharding as shard_rules
+                    pdev = shard_rules.party_axis_size(sys.mesh)
+                    sharded_eff = any(
+                        shard_rules.party_shardable(sys.mesh, len(idx))
+                        for _, idx in sys._eng.groups)
+                    r["party_devices"] = pdev if sharded_eff else 1
+                    if not sharded_eff:
+                        print(f"many_party C={C} engine=sharded WARNING: "
+                              f"no party group divides the {pdev}-way "
+                              f"axis — rows measure the vectorized "
+                              f"fallback")
+                # rep counts scale inversely with C: the small-C cells
+                # are sub-millisecond and feed the CI gate, so they need
+                # many more reps than C=128 to beat scheduler noise
+                r.update(time_masks(sys, batch, rounds=max(5, 512 // C)))
+                if not mask_only:
+                    r.update(time_rounds(sys, nf, batch,
+                                         max(rounds, 256 // C)))
+                # per-row host-speed probe: the gate normalizes each cell
+                # by a calibration measured right next to it
+                r["cal_ms"] = calibration_ms(20)
+                key = (C, eng, use_kernel, fused_eff)
+                merged[key] = (r if key not in merged
+                               else _merge_min(merged[key], r))
+                round_txt = ("" if mask_only else
+                             f"round {r['round_ms']:8.2f} ms  "
+                             f"compile {r['compile_s']:6.1f} s  "
+                             f"loss {r['loss']:.3f}  ")
+                print(f"many_party C={C:4d} engine={eng:10s} "
+                      f"{round_txt}"
+                      f"ceremony {setup_s:5.1f} s  "
+                      f"mask_first {r['mask_first_ms']:9.1f} ms  "
+                      f"mask {r['mask_ms']:7.2f} ms"
+                      + (f"  [pass {rep + 1}/{repeat}]"
+                         if repeat > 1 else ""))
+    rows = list(merged.values())
     if save:
+        payload = {
+            "schema": SCHEMA,
+            "generated_by": "benchmarks/many_party_scaling.py",
+            "jax_version": jax.__version__,
+            "device_count": jax.device_count(),
+            "calibration_ms": calibration_ms(),
+            "config": {"batch": batch, "rounds": rounds, "d_embed": d_embed,
+                       "n_features": n_feat_total, "mask_mode": mask_mode,
+                       "mask_only": mask_only},
+            "rows": rows,
+        }
         os.makedirs(os.path.dirname(save) or ".", exist_ok=True)
         with open(save, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(payload, f, indent=1)
         print(f"saved -> {save}")
     return rows
 
@@ -162,8 +267,13 @@ def main():
                     help="comma-separated party counts")
     ap.add_argument("--smoke", action="store_true",
                     help="C=64 only, reduced shapes (CI-runnable)")
+    ap.add_argument("--gate", action="store_true",
+                    help="the CI perf-gate preset: C in {4,16,64}, "
+                         "vectorized engine, reduced shapes — the sweep "
+                         "benchmarks/compare.py gates against the "
+                         "committed benchmarks/BENCH_many_party.json")
     ap.add_argument("--engine", default="both",
-                    choices=["both", "vectorized", "loop"])
+                    choices=["both", "vectorized", "sharded", "loop"])
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--d-embed", type=int, default=64)
@@ -179,19 +289,31 @@ def main():
                     help="time mask synthesis only (skip training rounds)")
     ap.add_argument("--loop-max-c", type=int, default=16,
                     help="skip the loop engine above this C")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="sweep every cell this many times (min-merged) — "
+                         "defeats minute-scale host speed-regime drift")
     ap.add_argument("--save", default="experiments/bench/many_party.json")
     a = ap.parse_args()
-    if a.smoke:
+    if a.gate:
+        # MUST stay in sync with the committed baseline's config block —
+        # compare.py refuses to gate across mismatched configs
+        cs, engines = [4, 16, 64], ["vectorized"]
+        a.batch, a.rounds, a.n_features, a.d_embed = 32, 5, 256, 64
+        a.repeat = max(a.repeat, 2)
+        save = a.save
+    elif a.smoke:
         cs, engines = [64], ["vectorized"]
         a.batch, a.rounds, a.n_features = 32, 5, 256
+        save = None
     else:
         cs = [int(c) for c in a.cs.split(",")]
         engines = (["vectorized", "loop"] if a.engine == "both"
                    else [a.engine])
+        save = a.save
     run(cs, engines, a.batch, a.rounds, a.d_embed, a.n_features,
         a.use_kernel, a.mask_mode, a.loop_max_c,
-        fused_masks=a.fused_masks, mask_only=a.mask_only,
-        save=None if a.smoke else a.save)
+        fused_masks=a.fused_masks, mask_only=a.mask_only, save=save,
+        repeat=a.repeat)
 
 
 if __name__ == "__main__":

@@ -23,8 +23,10 @@ from repro.core import blinding
 
 
 def blind(E_passive: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
-    """[E_k] = E_k + r_k. E_passive/masks: (K, ...)."""
-    return E_passive + masks.astype(E_passive.dtype)
+    """[E_k] = E_k + r_k. E_passive/masks: (K, ...). Routed through
+    ``blinding.blind_uplink`` — the one wire-format definition every
+    engine path shares."""
+    return blinding.blind_uplink(E_passive, masks, "float")
 
 
 def aggregate(E_active: jnp.ndarray, E_passive_blinded: jnp.ndarray,
@@ -71,6 +73,17 @@ def blind_and_aggregate_fused(E_all: jnp.ndarray,
                                      mask_scale=mask_scale)
 
 
+def aggregate_int32_blinded(q_uplink: jnp.ndarray) -> jnp.ndarray:
+    """Ring-mode aggregate from an ALREADY-blinded stack: (C, ...) int32
+    whose rows are already quantized (+ masked, for passives; the sharded
+    engine blinds in-shard before the uplink gather). Matches
+    ``aggregate_int32`` exactly — int32 ring addition is associative, so
+    any summation order gives the same words."""
+    C = q_uplink.shape[0]
+    s = jnp.sum(q_uplink, axis=0)
+    return blinding.dequantize(s) / C
+
+
 def aggregate_int32(E_all: jnp.ndarray, masks_i32: jnp.ndarray) -> jnp.ndarray:
     """Ring-exact fixed-point secure aggregation (beyond-paper mode).
 
@@ -78,7 +91,9 @@ def aggregate_int32(E_all: jnp.ndarray, masks_i32: jnp.ndarray) -> jnp.ndarray:
     Returns float mean; quantization error <= C / (2*FIXED_POINT_SCALE).
     """
     C = E_all.shape[0]
-    q = blinding.quantize(E_all)                    # (C, ...)
-    q = q.at[1:].add(masks_i32)                     # wrap-around add
-    s = jnp.sum(q, axis=0)                          # masks cancel in Z_2^32
+    # passive rows through THE wire format (quantize + ring add); active
+    # row quantized locally. Ring addition is associative, so this
+    # regrouping is word-exact vs summing a single (C, ...) stack.
+    up = blinding.blind_uplink(E_all[1:], masks_i32, "int32")
+    s = blinding.quantize(E_all[0]) + jnp.sum(up, axis=0)
     return blinding.dequantize(s) / C

@@ -27,10 +27,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro import sharding as shard_rules
 from repro.configs.base import EasterConfig, ModelConfig
 from repro.core import aggregation, blinding
 from repro.core.losses import chunked_lm_head_xent, lm_xent
+from repro.core.party_engine import stack_trees, unstack_tree
 from repro.models import transformer
 from repro.models.layers import (
     _dense_init, apply_norm, init_linear, init_mlp, init_norm, linear, mlp,
@@ -40,11 +43,13 @@ from repro.models.layers import (
 @functools.lru_cache(maxsize=None)
 def _cached_mask_setup(num_passive: int, vectorized: bool):
     """One DH ceremony per (K, engine) — the EasterLM seed is fixed
-    (deterministic_seed=1729), so the result is a pure function of K."""
-    _, seeds = blinding.setup_passive_parties(num_passive,
-                                              deterministic_seed=1729)
+    (deterministic_seed=1729), so the result is a pure function of K.
+    Delegates to the blinding-level memoized ceremony so every step
+    builder (train, serve, prefill) and every engine flavour shares the
+    same K(K-1)/2 modexps."""
     if vectorized:
-        return blinding.MaskEngine.from_seeds(num_passive, seeds)
+        return blinding.cached_mask_engine(num_passive, 1729)
+    _, seeds = blinding.cached_passive_setup(num_passive, 1729)
     return seeds
 
 
@@ -78,8 +83,15 @@ class EasterLM:
     # vectorized: the K passive proxies share one config (see passive_cfg),
     # so their params stack and the whole passive side runs under ONE
     # jax.vmap (core/party_engine.py idea at LLM scale) instead of a K-way
-    # Python loop. loop: the seed's per-party path (equivalence oracle).
+    # Python loop. sharded: the same stacked group additionally lays out
+    # over a "party" mesh axis with shard_map — blinding happens in-shard
+    # and the blinded uplink's all-gather is the only party-axis
+    # collective. loop: the seed's per-party path (equivalence oracle).
     engine: str = "vectorized"
+    # party-axis mesh for engine="sharded"; None = every local device.
+    # When K doesn't divide the axis the sharded paths degrade to plain
+    # vectorized execution (the mesh is an accelerator, not a constraint).
+    mesh: Any = None
 
     @property
     def party_cfgs(self) -> List[ModelConfig]:
@@ -101,7 +113,7 @@ class EasterLM:
         if self.easter.num_passive < 2 or not self.easter.enabled:
             return None
         return _cached_mask_setup(self.easter.num_passive,
-                                  self.engine == "vectorized")
+                                  self.engine != "loop")
 
     # -- params --------------------------------------------------------------
     def init_party(self, key, pcfg: ModelConfig) -> Dict[str, Any]:
@@ -137,13 +149,16 @@ class EasterLM:
         E = linear(pparams["proj"], h)                 # (B, S, d_embed)
         return E, new_caches, aux
 
-    def masks_for(self, shape, round_idx, seeds):
-        """seeds: None | MaskEngine | pair-seed dict (loop oracle)."""
+    def masks_for(self, shape, round_idx, seeds, *, mesh=None):
+        """seeds: None | MaskEngine | pair-seed dict (loop oracle).
+        ``mesh``: per-group mask sharding — the MaskEngine synthesizes
+        each device's party rows in-shard, so masks are born laid out
+        over the party axis (sharded engine only)."""
         if seeds is None:
             return None
         r = round_idx if self.easter.fresh_masks else 0
         if isinstance(seeds, blinding.MaskEngine):
-            return seeds.masks(shape, r, self.easter.mask_mode)
+            return seeds.masks(shape, r, self.easter.mask_mode, mesh=mesh)
         return blinding.all_party_masks(
             self.easter.num_passive, seeds, shape, r, self.easter.mask_mode)
 
@@ -167,12 +182,31 @@ class EasterLM:
 
     def _passive_group_ok(self) -> bool:
         """True when parties 1..K are structurally identical (they are by
-        construction of passive_cfg — only the name differs) and the
-        vectorized engine is selected."""
-        if self.engine != "vectorized" or self.easter.num_passive < 1:
+        construction of passive_cfg — only the name differs) and a
+        stacked-group engine (vectorized or sharded) is selected."""
+        if (self.engine not in ("vectorized", "sharded")
+                or self.easter.num_passive < 1):
             return False
         anon = [dataclasses.replace(c, name="") for c in self.party_cfgs[1:]]
         return all(c == anon[0] for c in anon)
+
+    @functools.cached_property
+    def party_mesh(self):
+        """Resolved party-axis mesh (engine="sharded" only) — cached so
+        every shard_map/mask-synthesis site in a traced step sees the
+        ONE Mesh object rather than re-building it per access."""
+        if self.engine != "sharded":
+            return None
+        if self.mesh is not None:
+            return self.mesh
+        from repro.launch.mesh import make_party_mesh
+        return make_party_mesh()
+
+    def _shard_ok(self) -> bool:
+        """True when the K-passive stack can lay out over the party axis."""
+        return (self.engine == "sharded"
+                and shard_rules.party_shardable(self.party_mesh,
+                                                self.easter.num_passive))
 
     def _aggregate(self, E_all, round_idx, seeds):
         """Shared blind+aggregate step of both engines: sharding-constrained
@@ -214,6 +248,18 @@ class EasterLM:
         total = jnp.sum(jnp.stack(per)) + jnp.sum(jnp.stack(auxes))
         return total, jnp.stack(per)
 
+    def _aggregate_grouped(self, E_a, up_p, blinded: bool):
+        """Aggregate the active embedding with the (gathered) passive
+        uplink, replaying ``_aggregate``'s op order bit-for-bit. ``up_p``
+        is already blinded when ``blinded`` (float: E+r; int32:
+        quantize(E)+r), raw otherwise (seeds=None oracle)."""
+        if not blinded:
+            return jnp.mean(jnp.concatenate([E_a[None], up_p], axis=0), 0)
+        if self.easter.mask_mode == "int32":
+            return aggregation.aggregate_int32_blinded(
+                jnp.concatenate([blinding.quantize(E_a)[None], up_p], 0))
+        return aggregation.aggregate(E_a, up_p)
+
     def _loss_fn_vectorized(self, params, batch, round_idx, seeds):
         """One vmap over the stacked passive group instead of a K-way loop.
 
@@ -221,14 +267,15 @@ class EasterLM:
         surrogate is applied to the stacked (C, B, S, d) per-party view, so
         ONE jax.grad still yields every party's own-loss-only gradient.
         """
-        from repro.core.party_engine import stack_trees
-
         tokens, labels = batch["tokens"], batch["labels"]
         fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
         pcfg_a, pcfg_p = self.party_cfgs[0], self.party_cfgs[1]
         E_a, _, aux_a = self.local_embed(params["parties"][0], pcfg_a,
                                          tokens, **fe)
         stacked = stack_trees(params["parties"][1:])
+        if self._shard_ok():
+            return self._loss_fn_sharded(params, batch, round_idx, seeds,
+                                         E_a, aux_a, stacked)
 
         def embed_one(pp):
             E_k, _, aux_k = self.local_embed(pp, pcfg_p, tokens, **fe)
@@ -257,6 +304,80 @@ class EasterLM:
         total = jnp.sum(per) + aux_a + jnp.sum(aux_p)
         return total, per
 
+    def _loss_fn_sharded(self, params, batch, round_idx, seeds,
+                         E_a, aux_a, stacked):
+        """Party-mesh training round at LLM scale.
+
+        The K stacked passive proxies (and their freshly-synthesized
+        masks, see ``MaskEngine.masks(mesh=...)``) lay out over the
+        "party" axis; the stage-1 shard_map body embeds + blinds locally
+        and the tiled all-gather of the blinded uplink is the only
+        party-axis collective carrying embedding-shaped data (gathered
+        per-party aux/losses are protocol wire the active party receives
+        anyway). Forward is bit-exact vs the vectorized engine; grads
+        agree to ~1 ulp (shard-local vjp fusion).
+        """
+        mesh, ax = self.party_mesh, shard_rules.PARTY_AXIS
+        tokens, labels = batch["tokens"], batch["labels"]
+        fe = {k: v for k, v in batch.items() if k.endswith("_embed")}
+        pcfg_a, pcfg_p = self.party_cfgs[0], self.party_cfgs[1]
+        C = self.C
+        masks = self.masks_for(E_a.shape, round_idx, seeds, mesh=mesh)
+        mask_mode = self.easter.mask_mode
+
+        def embed_body(pp, tok, f, m=None):
+            def one(p):
+                E_k, _, aux_k = self.local_embed(p, pcfg_p, tok, **f)
+                return E_k, aux_k
+
+            E_k, aux_k = jax.vmap(one)(pp)
+            up = blinding.blind_uplink(E_k, m, mask_mode)
+            return (E_k, jax.lax.all_gather(aux_k, ax, axis=0, tiled=True),
+                    jax.lax.all_gather(up, ax, axis=0, tiled=True))
+
+        if masks is None:
+            E_loc, aux_p, up_p = shard_rules.shard_map_compat(
+                embed_body, mesh, in_specs=(P(ax), P(), P()),
+                out_specs=(P(ax), P(), P()))(stacked, tokens, fe)
+        else:
+            E_loc, aux_p, up_p = shard_rules.shard_map_compat(
+                embed_body, mesh, in_specs=(P(ax), P(), P(), P(ax)),
+                out_specs=(P(ax), P(), P()))(stacked, tokens, fe, masks)
+
+        E = self._aggregate_grouped(E_a, up_p, masks is not None)
+        E = E.astype(E_a.dtype)
+        if self.grad_mode == "easter":
+            E_for_a = (jax.lax.stop_gradient(E)
+                       - jax.lax.stop_gradient(E_a) / C + E_a / C)
+        else:
+            E_for_a = E
+        h_a = self.decide_hidden(params["parties"][0], pcfg_a, E_for_a)
+        per_a = chunked_lm_head_xent(
+            h_a, params["parties"][0]["head"]["w"], labels)
+
+        grad_mode = self.grad_mode
+
+        def decide_body(pp, e_loc, e_glob, lab):
+            if grad_mode == "easter":
+                e_for = (jax.lax.stop_gradient(e_glob)[None]
+                         - jax.lax.stop_gradient(e_loc) / C + e_loc / C)
+            else:
+                e_for = jnp.broadcast_to(e_glob[None], e_loc.shape)
+
+            def one(p, e):
+                h_k = self.decide_hidden(p, pcfg_p, e)
+                return chunked_lm_head_xent(h_k, p["head"]["w"], lab)
+
+            per = jax.vmap(one)(pp, e_for)
+            return jax.lax.all_gather(per, ax, axis=0, tiled=True)
+
+        per_p = shard_rules.shard_map_compat(
+            decide_body, mesh, in_specs=(P(ax), P(ax), P(), P()),
+            out_specs=P())(stacked, E_loc, E, labels)
+        per = jnp.concatenate([per_a[None], per_p])
+        total = jnp.sum(per) + aux_a + jnp.sum(aux_p)
+        return total, per
+
     # -- serving -------------------------------------------------------------
     def init_caches(self, batch: int, cache_len: int,
                     window_override: int = -1):
@@ -280,7 +401,15 @@ class EasterLM:
         fe_list: per-party frontend extras (e.g. whisper's precomputed
         cross-attention ``enc_kv``) — party models are heterogeneous, so
         these differ per party.
+
+        Execution engines mirror training: with a stackable passive group
+        the K proxies decode under one vmap (engine="vectorized") or
+        K-parallel across the party mesh with in-shard blinding
+        (engine="sharded"); the loop path remains the per-party oracle.
         """
+        if self._passive_group_ok():
+            return self._serve_step_grouped(params, tokens, caches, pos,
+                                            seeds, window_override, fe_list)
         Es, new_caches = [], []
         for k, pcfg in enumerate(self.party_cfgs):
             fe = fe_list[k] if fe_list else {}
@@ -293,6 +422,81 @@ class EasterLM:
                                    blinding.SERVE_DOMAIN + pos, seeds)
         logits = self.decide(params["parties"][0], self.party_cfgs[0],
                              E.astype(E_all.dtype))
+        return logits, new_caches
+
+    def _passive_embed_grouped(self, params, tokens, caches, pos,
+                               window_override, fe_list, round_idx, seeds):
+        """Shared passive-side embed of the grouped serve/prefill paths.
+
+        Stacks the K passive params/caches/frontend-extras and runs ONE
+        vmapped ``local_embed`` — under ``engine="sharded"`` the stack
+        (and the per-request masks) lays out over the party mesh and the
+        blinded uplink is gathered in-shard, mirroring training.
+
+        Returns ``(up_p, new_caches_p, blinded)``: the (K, B, S, d)
+        passive uplink as the active party observes it (blinded when
+        ``seeds`` is set), the stacked new passive caches, and whether
+        blinding was applied.
+        """
+        pcfg_p = self.party_cfgs[1]
+        wo = window_override
+        sp = stack_trees(params["parties"][1:])
+        sc = stack_trees(caches[1:])
+        sfe = stack_trees(fe_list[1:]) if fe_list else {}
+
+        def embed_k(pp, cc, f, tok, pos_):
+            def one(p, c, ff):
+                E_k, nc, _ = self.local_embed(p, pcfg_p, tok, caches=c,
+                                              pos_offset=pos_,
+                                              window_override=wo, **ff)
+                return E_k, nc
+
+            return jax.vmap(one)(pp, cc, f)
+
+        if not self._shard_ok():
+            E_p, nc_p = embed_k(sp, sc, sfe, tokens, pos)
+            return E_p, nc_p, None       # caller blinds via _aggregate
+        mesh, ax = self.party_mesh, shard_rules.PARTY_AXIS
+        # (B, S, d) per-party embedding shape this step produces
+        eshape = (tokens.shape[0], tokens.shape[1], self.easter.d_embed)
+        masks = self.masks_for(eshape, round_idx, seeds, mesh=mesh)
+        mask_mode = self.easter.mask_mode
+
+        def body(pp, cc, f, tok, pos_, m=None):
+            E_k, nc = embed_k(pp, cc, f, tok, pos_)
+            up = blinding.blind_uplink(E_k, m, mask_mode)
+            return jax.lax.all_gather(up, ax, axis=0, tiled=True), nc
+
+        # params / caches / frontend-extras all carry the stacked K axis
+        specs = [P(ax), P(ax), P(ax), P(), P()]
+        args = [sp, sc, sfe, tokens, pos]
+        if masks is not None:
+            specs.append(P(ax))
+            args.append(masks)
+        up_p, nc_p = shard_rules.shard_map_compat(
+            body, mesh, in_specs=tuple(specs),
+            out_specs=(P(), P(ax)))(*args)
+        return up_p, nc_p, masks is not None
+
+    def _serve_step_grouped(self, params, tokens, caches, pos, seeds,
+                            window_override, fe_list):
+        pcfg_a = self.party_cfgs[0]
+        fe_a = fe_list[0] if fe_list else {}
+        E_a, nc_a, _ = self.local_embed(
+            params["parties"][0], pcfg_a, tokens, caches=caches[0],
+            pos_offset=pos, window_override=window_override, **fe_a)
+        up_p, nc_p, blinded = self._passive_embed_grouped(
+            params, tokens, caches, pos, window_override, fe_list,
+            blinding.SERVE_DOMAIN + pos, seeds)
+        if blinded is None:              # vectorized: blind in _aggregate
+            E_all, E = self._aggregate(
+                jnp.concatenate([E_a[None], up_p], axis=0),
+                blinding.SERVE_DOMAIN + pos, seeds)
+            E = E.astype(E_all.dtype)
+        else:                            # sharded: uplink already blinded
+            E = self._aggregate_grouped(E_a, up_p, blinded).astype(E_a.dtype)
+        logits = self.decide(params["parties"][0], pcfg_a, E)
+        new_caches = [nc_a] + unstack_tree(nc_p, self.easter.num_passive)
         return logits, new_caches
 
     def prefill(self, params, tokens, caches, window_override: int = -1,
@@ -314,6 +518,10 @@ class EasterLM:
         PREFILL_DOMAIN so prompt masks never coincide with training-round
         or decode-step masks (fresh_masks=False deliberately collapses
         all of this to the paper's single static pad)."""
+        if self._passive_group_ok():
+            return self._prefill_grouped(params, tokens, caches,
+                                         window_override, fe_list, seeds,
+                                         round_idx)
         Es, new_caches = [], []
         for k, pcfg in enumerate(self.party_cfgs):
             fe = fe_list[k] if fe_list else {}
@@ -326,11 +534,44 @@ class EasterLM:
                                blinding.PREFILL_DOMAIN + round_idx, seeds)
         return E, new_caches
 
+    def _prefill_grouped(self, params, tokens, caches, window_override,
+                         fe_list, seeds, round_idx):
+        pcfg_a = self.party_cfgs[0]
+        fe_a = fe_list[0] if fe_list else {}
+        E_a, nc_a, _ = self.local_embed(
+            params["parties"][0], pcfg_a, tokens, caches=caches[0],
+            window_override=window_override, **fe_a)
+        up_p, nc_p, blinded = self._passive_embed_grouped(
+            params, tokens, caches, 0, window_override, fe_list,
+            blinding.PREFILL_DOMAIN + round_idx, seeds)
+        if blinded is None:              # vectorized: blind in _aggregate
+            _, E = self._aggregate(
+                jnp.concatenate([E_a[None], up_p], axis=0),
+                blinding.PREFILL_DOMAIN + round_idx, seeds)
+        else:                            # sharded: uplink already blinded
+            E = self._aggregate_grouped(E_a, up_p, blinded)
+        new_caches = [nc_a] + unstack_tree(nc_p, self.easter.num_passive)
+        return E, new_caches
+
     def encoder_kv(self, params, audio_embed):
-        """Whisper path: per-party precomputed cross-attention K/V."""
-        out = []
-        for k, pcfg in enumerate(self.party_cfgs):
-            bp = params["parties"][k]["backbone"]
+        """Whisper path: per-party precomputed cross-attention K/V.
+
+        With a stackable passive group the K proxy encoders run under one
+        vmap instead of a per-party loop (they share a config, so their
+        K/V shapes match)."""
+
+        def one_kv(bp, pcfg):
             enc_out = transformer.encode(bp, audio_embed, pcfg)
-            out.append({"enc_kv": transformer._encoder_kv(bp, enc_out, pcfg)})
-        return out
+            return transformer._encoder_kv(bp, enc_out, pcfg)
+
+        if not self._passive_group_ok():
+            return [{"enc_kv": one_kv(params["parties"][k]["backbone"], pcfg)}
+                    for k, pcfg in enumerate(self.party_cfgs)]
+        active = {"enc_kv": one_kv(params["parties"][0]["backbone"],
+                                   self.party_cfgs[0])}
+        pcfg_p = self.party_cfgs[1]
+        stacked = stack_trees([p["backbone"] for p in params["parties"][1:]])
+        kvs = jax.vmap(lambda bp: one_kv(bp, pcfg_p))(stacked)
+        return [active] + [{"enc_kv": t}
+                           for t in unstack_tree(kvs,
+                                                 self.easter.num_passive)]

@@ -1,4 +1,4 @@
-"""Vectorized many-party execution engine.
+"""Vectorized + mesh-sharded many-party execution engine.
 
 The paper runs C = 4 parties, and the seed implementation looped over them
 in Python (`for k in range(C)`), which builds C separate XLA subgraphs and
@@ -17,17 +17,48 @@ results. The grouping is an *execution strategy only* — params stay a plain
 per-party list (the federation's trust boundaries), and grads come back as
 a per-party list.
 
+Mesh mode (``mesh=`` + ``party_axis=``): the protocol is embarrassingly
+parallel across participants, so each group's stacked params and feature
+slices additionally lay out over a ``"party"`` mesh axis with ``shard_map``
+(compat shims in ``repro.sharding``) and the group vmap runs K-parallel
+across devices. Two execution families:
+
+  * raw steps (``embed_all`` / ``decide_all`` / ``embed_vjp`` /
+    ``decide_vjp``) — compute shards over the party axis, outputs are
+    all-gathered back to every device (API-compatible with the
+    single-device engine; used by the assisted-grad reference oracle and
+    the accuracy/forward paths).
+  * the blinded production round (``embed_blind_uplink`` +
+    ``aggregate_via_active`` + ``decide_from``) — local embeddings NEVER
+    leave their device raw: the stage-1 body blinds in-shard
+    ([E_k] = E_k + r_k, or the Z_2^32 quantize-add in int32 mode) and
+    zeroes the active party's row (it sends nothing on the uplink), the
+    tiled all-gather of that blinded uplink is the embedding-shaped
+    party collective, the active party's device aggregates locally and a
+    psum broadcasts the global embedding (paper line 6 downlink), and
+    stage 2 maps it back through a caller-supplied per-party view (the
+    stop-gradient surrogate) against the still-sharded local embeddings.
+
+Groups whose size does not divide the party axis fall back to the plain
+vmap path (replicated execution) — the mesh is an accelerator, never a
+correctness constraint. Forward values are bit-exact vs the single-device
+engine; backward passes agree to ~1 ulp (XLA fuses the shard-local vjp
+bodies differently — proven tight in tests/test_party_sharding.py).
+
 Used by ``core/protocol.py`` (paper scale) and ``core/easter_lm.py`` (LLM
 scale, where the K passive proxies share one config and form one group).
 Equivalence with the loop engine is proven in tests/test_protocol_grads.py.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro import sharding as shard_rules
+from repro.core import blinding
 from repro.core.party_models import PartyArch, decide_fn, embed_fn
 
 
@@ -53,13 +84,16 @@ class PartyEngine:
     """Grouped-vmap executor for C heterogeneous paper-scale parties."""
 
     def __init__(self, arches: Sequence[PartyArch],
-                 n_features: Sequence[int]):
+                 n_features: Sequence[int], mesh=None,
+                 party_axis: str = shard_rules.PARTY_AXIS):
         assert len(arches) == len(n_features)
         self.C = len(arches)
         self.arches = list(arches)
         self.n_features = list(n_features)
         assert len({a.d_embed for a in arches}) == 1, "d_embed must be shared"
         assert len({a.n_classes for a in arches}) == 1, "labels are shared"
+        self.mesh = mesh
+        self.party_axis = party_axis
         self.groups = group_by(list(zip(self.arches, self.n_features)))
         order = [i for _, idx in self.groups for i in idx]
         inv = [0] * self.C
@@ -81,6 +115,22 @@ class PartyEngine:
         """(C, B, ...) -> this group's (G, B, ...) slab."""
         return x_per_party[jnp.asarray(idx, jnp.int32)]
 
+    def _sharded(self, n_group: int) -> bool:
+        return shard_rules.party_shardable(self.mesh, n_group,
+                                           self.party_axis)
+
+    def _gathered(self, fn: Callable, n_in: int) -> Callable:
+        """shard_map ``fn`` over the party axis, all-gathering its single
+        output back to replicated — the drop-in sharded twin of a stacked
+        group fn (raw path: outputs DO cross the party collective)."""
+        ax = self.party_axis
+
+        def body(*args):
+            return jax.lax.all_gather(fn(*args), ax, axis=0, tiled=True)
+
+        return shard_rules.shard_map_compat(
+            body, self.mesh, in_specs=(P(ax),) * n_in, out_specs=P())
+
     # -- forward -----------------------------------------------------------
     def embed_all(self, params: Sequence[dict], xs: Sequence[jnp.ndarray]
                   ) -> jnp.ndarray:
@@ -89,8 +139,13 @@ class PartyEngine:
         for (arch, _), idx in self.groups:
             sp = stack_trees([params[i] for i in idx])
             sx = jnp.stack([xs[i] for i in idx])
-            outs.append(jax.vmap(
-                lambda p, x, a=arch: embed_fn(p, a, x))(sp, sx))
+
+            def gf(p, x, a=arch):
+                return jax.vmap(lambda pi, xi: embed_fn(pi, a, xi))(p, x)
+
+            if self._sharded(len(idx)):
+                gf = self._gathered(gf, 2)
+            outs.append(gf(sp, sx))
         return self._scatter(outs)
 
     def decide_all(self, params: Sequence[dict], E_per_party: jnp.ndarray
@@ -100,8 +155,148 @@ class PartyEngine:
         for (arch, _), idx in self.groups:
             sp = stack_trees([params[i] for i in idx])
             se = self._gather(E_per_party, idx)
-            outs.append(jax.vmap(
-                lambda p, e, a=arch: decide_fn(p, a, e))(sp, se))
+
+            def gf(p, e, a=arch):
+                return jax.vmap(lambda pi, ei: decide_fn(pi, a, ei))(p, e)
+
+            if self._sharded(len(idx)):
+                gf = self._gathered(gf, 2)
+            outs.append(gf(sp, se))
+        return self._scatter(outs)
+
+    # -- blinded production round (sharded path) ---------------------------
+    def embed_blind_uplink(self, params: Sequence[dict],
+                           xs: Sequence[jnp.ndarray],
+                           full_masks: Optional[jnp.ndarray],
+                           mask_mode: str = "float"):
+        """Stage 1 of the sharded protocol round: embed + blind in-shard.
+
+        ``full_masks`` (C, *mask_shape), party order, zero row for the
+        active party — or None (blinding disabled by the caller; the
+        uplink is then the raw embedding, which is that caller's explicit
+        choice, e.g. the unmasked parity oracle).
+
+        Returns ``(E_parts, uplink)``:
+          * E_parts — per-group (G, B, d) local embeddings in group order,
+            left SHARDED over the party axis (they never cross a
+            collective raw);
+          * uplink — (C, B, d) party-order stack of what actually crossed
+            the party-axis collective, replicated: [E_k] = E_k + r_k in
+            float mode, quantize(E_k) + r_k in Z_2^32 in int32 mode —
+            and a ZERO row for the active party: it sends nothing on the
+            uplink (paper Alg. 1: it is the receiver); its raw embedding
+            enters the round only through ``aggregate_via_active``.
+        """
+        ax = self.party_axis
+        E_parts, ups = [], []
+        for (arch, _), idx in self.groups:
+            sp = stack_trees([params[i] for i in idx])
+            sx = jnp.stack([xs[i] for i in idx])
+            gm = (None if full_masks is None
+                  else self._gather(full_masks, idx))
+            # the active party's row inside this group (-1: not here)
+            i0 = idx.index(0) if (0 in idx and gm is not None) else -1
+
+            def body(p, x, m, a=arch):
+                E = jax.vmap(lambda pi, xi: embed_fn(pi, a, xi))(p, x)
+                return E, blinding.blind_uplink(E, m, mask_mode)
+
+            if self._sharded(len(idx)):
+                if gm is None:
+                    def sh_body(p, x, f=body, i0=i0):
+                        E, up = f(p, x, None)
+                        return E, jax.lax.all_gather(up, ax, axis=0,
+                                                     tiled=True)
+                    args = (sp, sx)
+                else:
+                    def sh_body(p, x, m, f=body, i0=i0):
+                        E, up = f(p, x, m)
+                        if i0 >= 0:
+                            # zero the active row IN-SHARD, before the
+                            # collective: its raw embedding must not ride
+                            # the uplink gather
+                            gids = (jax.lax.axis_index(ax) * up.shape[0]
+                                    + jnp.arange(up.shape[0]))
+                            keep = (gids != i0).reshape(
+                                (-1,) + (1,) * (up.ndim - 1))
+                            up = jnp.where(keep, up, jnp.zeros_like(up))
+                        return E, jax.lax.all_gather(up, ax, axis=0,
+                                                     tiled=True)
+                    args = (sp, sx, gm)
+                E_loc, up = shard_rules.shard_map_compat(
+                    sh_body, self.mesh, in_specs=(P(ax),) * len(args),
+                    out_specs=(P(ax), P()))(*args)
+            else:
+                E_loc, up = body(sp, sx, gm)
+                if i0 >= 0:
+                    up = up.at[i0].set(0)
+            E_parts.append(E_loc)
+            ups.append(up)
+        return E_parts, self._scatter(ups)
+
+    def aggregate_via_active(self, E_parts: List[jnp.ndarray],
+                             uplink: jnp.ndarray, agg_fn: Callable
+                             ) -> jnp.ndarray:
+        """Paper Alg. 1 line 6 on the mesh: the ACTIVE party aggregates
+        locally and broadcasts the global embedding.
+
+        Party 0 is always local row 0 of the first group's first shard
+        (first-seen grouping), so only that device evaluates
+        ``agg_fn(E_a_raw, uplink)``; a psum broadcasts the result. The
+        downlink collective therefore carries the global embedding E —
+        wire every party legitimately receives — and the active party's
+        raw embedding never crosses the party axis.
+        """
+        E0 = E_parts[0]
+        n0 = len(self.groups[0][1])
+        if not self._sharded(n0):
+            return agg_fn(E0[0], uplink)
+        ax = self.party_axis
+
+        def body(e_loc, up):
+            cand = agg_fn(e_loc[0], up)
+            owner = jax.lax.axis_index(ax) == 0
+            return jax.lax.psum(
+                jnp.where(owner, cand, jnp.zeros_like(cand)), ax)
+
+        return shard_rules.shard_map_compat(
+            body, self.mesh, in_specs=(P(ax), P()),
+            out_specs=P())(E0, uplink)
+
+    def decide_from(self, params: Sequence[dict], E_parts: List[jnp.ndarray],
+                    E_global: jnp.ndarray, view_fn: Callable) -> jnp.ndarray:
+        """Stage 2 of the sharded round: per-party decisions on the party
+        view of the global embedding.
+
+        ``view_fn(E_global, E_loc) -> E_for_loc`` is applied INSIDE the
+        shard (it is the caller's stop-gradient surrogate), so each
+        party's raw local embedding is consumed on its own device; only
+        the resulting predictions — protocol wire that goes to the active
+        party anyway — cross the party-axis collective. Returns
+        (C, B, n_classes) replicated, party order.
+        """
+        ax = self.party_axis
+        outs = []
+        for g, ((arch, _), idx) in enumerate(self.groups):
+            sp = stack_trees([params[i] for i in idx])
+            E_loc = E_parts[g]
+
+            def body(p, e_loc, e_glob, a=arch):
+                e_for = view_fn(e_glob, e_loc)
+                return jax.vmap(
+                    lambda pi, ei: decide_fn(pi, a, ei))(p, e_for)
+
+            if self._sharded(len(idx)):
+                def sh_body(p, e_loc, e_glob, f=body):
+                    return jax.lax.all_gather(f(p, e_loc, e_glob), ax,
+                                              axis=0, tiled=True)
+
+                out = shard_rules.shard_map_compat(
+                    sh_body, self.mesh, in_specs=(P(ax), P(ax), P()),
+                    out_specs=P())(sp, E_loc, E_global)
+            else:
+                out = body(sp, E_loc, E_global)
+            outs.append(out)
         return self._scatter(outs)
 
     # -- explicit-vjp protocol path (message-passing reference) ------------
@@ -112,9 +307,13 @@ class PartyEngine:
         for (arch, _), idx in self.groups:
             sp = stack_trees([params[i] for i in idx])
             sx = jnp.stack([xs[i] for i in idx])
-            Eg, vjp_g = jax.vjp(
-                lambda p, a=arch, x=sx: jax.vmap(
-                    lambda pi, xi: embed_fn(pi, a, xi))(p, x), sp)
+
+            def gf(p, x, a=arch):
+                return jax.vmap(lambda pi, xi: embed_fn(pi, a, xi))(p, x)
+
+            if self._sharded(len(idx)):
+                gf = self._gathered(gf, 2)
+            Eg, vjp_g = jax.vjp(lambda p, f=gf, x=sx: f(p, x), sp)
             outs.append(Eg)
             vjps.append(vjp_g)
 
@@ -135,9 +334,13 @@ class PartyEngine:
         for (arch, _), idx in self.groups:
             sp = stack_trees([params[i] for i in idx])
             se = self._gather(E_per_party, idx)
-            Rg, vjp_g = jax.vjp(
-                lambda p, e, a=arch: jax.vmap(
-                    lambda pi, ei: decide_fn(pi, a, ei))(p, e), sp, se)
+
+            def gf(p, e, a=arch):
+                return jax.vmap(lambda pi, ei: decide_fn(pi, a, ei))(p, e)
+
+            if self._sharded(len(idx)):
+                gf = self._gathered(gf, 2)
+            Rg, vjp_g = jax.vjp(gf, sp, se)
             outs.append(Rg)
             vjps.append(vjp_g)
 

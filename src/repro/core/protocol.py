@@ -29,13 +29,17 @@ paper's active-party-assisted backward pass (explicit vjp per party), used to
 Execution engines: ``engine="vectorized"`` (default) groups parties by
 (arch, slice width) and runs each protocol step as one ``jax.vmap`` per
 group (core/party_engine.py) — O(#groups) XLA ops, scales to C=128+.
-``engine="loop"`` is the seed's per-party Python loop, kept as the
-equivalence oracle (tests prove the two match).
+``engine="sharded"`` additionally lays every group's stacked params and
+feature slices out over a ``"party"`` mesh axis with ``shard_map``: the
+training round blinds in-shard and the tiled all-gather of the blinded
+uplink is the only party-axis collective (raw local embeddings never
+leave their device). ``engine="loop"`` is the seed's per-party Python
+loop, kept as the equivalence oracle (tests prove all three match).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +59,13 @@ class EasterClassifier:
     n_features: List[int]               # per-party vertical feature split
     loss: str = "ce"
     grad_mode: str = "easter"           # easter (paper) | joint (beyond)
-    engine: str = "vectorized"          # vectorized (grouped vmap) | loop
+    # vectorized (grouped vmap) | sharded (grouped vmap laid out over a
+    # "party" mesh axis with shard_map) | loop (seed oracle)
+    engine: str = "vectorized"
+    # party-axis mesh for engine="sharded"; None builds a 1-D mesh over
+    # every local device (launch.mesh.make_party_mesh) — on a single
+    # device the sharded engine degrades to the plain vectorized path.
+    mesh: Any = None
     use_kernel: bool = False            # fused Pallas blind_agg aggregation
     # synthesize masks inside the Pallas kernel (pltpu PRNG) instead of
     # materializing the (K, B, d) tensor: float mode only; off-TPU falls
@@ -69,15 +79,28 @@ class EasterClassifier:
 
     def __post_init__(self):
         assert len(self.arches) == len(self.n_features)
-        assert self.engine in ("vectorized", "loop"), self.engine
+        assert self.engine in ("vectorized", "sharded", "loop"), self.engine
         self.C = len(self.arches)
         self.K = self.C - 1
-        self._eng = PartyEngine(self.arches, self.n_features)
+        if self.engine == "sharded":
+            if self.mesh is None:
+                from repro.launch.mesh import make_party_mesh
+                self.mesh = make_party_mesh()
+            assert self.compress_frac == 0, \
+                "top-k uplink compression needs the gathered raw stack — " \
+                "not available under the sharded engine"
+            assert not self.use_kernel and not self.fused_masks, \
+                "the Pallas blind_agg kernel is single-device; use the " \
+                "vectorized engine for kernel/fused-mask runs"
+        self._eng = PartyEngine(
+            self.arches, self.n_features,
+            mesh=self.mesh if self.engine == "sharded" else None)
         if self.K > 1:
-            self.keys, self.seeds = blinding.setup_passive_parties(
-                self.K, deterministic_seed=7)
-            self.mask_engine = blinding.MaskEngine.from_seeds(self.K,
-                                                              self.seeds)
+            # memoized DH ceremony: every system built from the same
+            # deterministic seed describes the same federation, so serve /
+            # train / benchmark builders share one set of modexps
+            self.keys, self.seeds = blinding.cached_passive_setup(self.K, 7)
+            self.mask_engine = blinding.cached_mask_engine(self.K, 7)
         else:
             self.keys, self.seeds = [], {}
             self.mask_engine = None
@@ -110,14 +133,14 @@ class EasterClassifier:
         if self.fused_masks:
             return blinding.FusedMasks(jnp.asarray(r, jnp.int32))
         shape = (batch, self.easter.d_embed)
-        if self.engine == "vectorized":
+        if self.engine in ("vectorized", "sharded"):
             return self.mask_engine.masks(shape, r, self.easter.mask_mode)
         return blinding.all_party_masks(self.K, self.seeds, shape, r,
                                         self.easter.mask_mode)
 
     def local_embeds(self, params, xs) -> jnp.ndarray:
         """(C, B, d_embed) local embeddings, party order."""
-        if self.engine == "vectorized":
+        if self.engine in ("vectorized", "sharded"):
             E_all = self._eng.embed_all(params, xs)
         else:
             E_all = jnp.stack([embed_fn(params[k], self.arches[k], xs[k])
@@ -149,7 +172,7 @@ class EasterClassifier:
     def _predictions_stacked(self, params, E, E_all=None) -> jnp.ndarray:
         """(C, B, n_classes) logits, party order."""
         E_for = self._per_party_E(E, E_all)
-        if self.engine == "vectorized":
+        if self.engine in ("vectorized", "sharded"):
             return self._eng.decide_all(params, E_for)
         return jnp.stack([decide_fn(params[k], self.arches[k], E_for[k])
                           for k in range(self.C)])
@@ -167,9 +190,53 @@ class EasterClassifier:
 
     def loss_fn(self, params, xs, y, masks=None):
         """Total (sum over parties) + per-party losses."""
+        if self.engine == "sharded":
+            return self._loss_fn_sharded(params, xs, y, masks)
         E_all = self.local_embeds(params, xs)
         E = self.global_embed(E_all, masks)
         R_all = self._predictions_stacked(params, E, E_all)
+        lf = losses.LOSSES[self.loss]
+        per = jax.vmap(lambda r: lf(r, y))(R_all)
+        return jnp.sum(per), per
+
+    def _loss_fn_sharded(self, params, xs, y, masks=None):
+        """Mesh-sharded training round. Party-axis wire, all of it
+        protocol-legitimate: the tiled all-gather of the BLINDED passive
+        uplink (active row zeroed — it sends nothing), one psum carrying
+        the global embedding the active party aggregated locally (paper
+        line 6 downlink), and the gathered predictions/losses. Raw local
+        embeddings never leave their device: the stop-gradient surrogate
+        is applied inside the decide shard. Bit-exact forward vs the
+        vectorized engine (the aggregate replays ``blind_and_aggregate``'s
+        op order on the gathered uplink)."""
+        full_masks = None
+        if masks is not None:
+            assert not isinstance(masks, blinding.FusedMasks)
+            full_masks = jnp.concatenate(
+                [jnp.zeros((1,) + masks.shape[1:], masks.dtype), masks], 0)
+        E_parts, up = self._eng.embed_blind_uplink(
+            params, xs, full_masks, self.easter.mask_mode)
+        if masks is None:
+            E = jnp.mean(up, axis=0)
+        elif self.easter.mask_mode == "int32":
+            E = self._eng.aggregate_via_active(
+                E_parts, up,
+                lambda e_a, u: aggregation.aggregate_int32_blinded(
+                    jnp.concatenate([blinding.quantize(e_a)[None], u[1:]],
+                                    0)))
+        else:
+            E = self._eng.aggregate_via_active(
+                E_parts, up,
+                lambda e_a, u: aggregation.aggregate(e_a, u[1:]))
+        C = self.C
+        if self.grad_mode == "easter":
+            def view(e_glob, e_loc):
+                return (jax.lax.stop_gradient(e_glob)[None]
+                        - jax.lax.stop_gradient(e_loc) / C + e_loc / C)
+        else:
+            def view(e_glob, e_loc):
+                return jnp.broadcast_to(e_glob[None], e_loc.shape)
+        R_all = self._eng.decide_from(params, E_parts, E, view)
         lf = losses.LOSSES[self.loss]
         per = jax.vmap(lambda r: lf(r, y))(R_all)
         return jnp.sum(per), per
@@ -178,7 +245,7 @@ class EasterClassifier:
     def assisted_grads(self, params, xs, y, masks=None):
         """Paper's explicit protocol: per-party vjp with active-party loss
         assist. Returns (grads list, per-party losses)."""
-        if self.engine == "vectorized":
+        if self.engine in ("vectorized", "sharded"):
             return self._assisted_grads_vectorized(params, xs, y, masks)
         lf = losses.LOSSES[self.loss]
         # step 1: local embeddings, keeping per-party vjp closures

@@ -26,6 +26,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_auto_kwargs(len(axes)))
 
 
+def make_party_mesh(n: int | None = None, axis: str = "party"):
+    """1-D mesh laying the EASTER party dimension over devices.
+
+    Used by the sharded party engine (core/party_engine.py): party groups
+    whose size divides the axis run K-parallel across devices. ``n=None``
+    takes every local device; on a single-device host the engine degrades
+    gracefully to the plain vectorized (vmap) execution path.
+    """
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), **_auto_kwargs(1))
+
+
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small host mesh for CPU integration tests."""
     return jax.make_mesh((data, model), ("data", "model"),

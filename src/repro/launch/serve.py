@@ -26,15 +26,31 @@ def main():
     ap.add_argument("--num-passive", type=int, default=3)
     ap.add_argument("--d-embed", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--engine", default="vectorized",
+                    choices=["vectorized", "sharded", "loop"],
+                    help="passive-party execution: grouped vmap | grouped "
+                         "vmap laid over a party mesh axis | seed loop")
+    ap.add_argument("--party-devices", type=int, default=0,
+                    help="party-axis mesh size for --engine sharded "
+                         "(0 = all local devices)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    mesh = None
+    if args.engine == "sharded":
+        from repro.launch.mesh import make_party_mesh
+        mesh = make_party_mesh(args.party_devices or None)
+        print(f"party mesh: {mesh}")
     sys_ = EasterLM(cfg=cfg, easter=EasterConfig(
-        num_passive=args.num_passive, d_embed=args.d_embed))
+        num_passive=args.num_passive, d_embed=args.d_embed),
+        engine=args.engine, mesh=mesh)
     params = sys_.init_params(jax.random.PRNGKey(args.seed))
+    # one cached DH ceremony feeds BOTH the prefill and the decode step
+    # builders below (blinding.cached_mask_engine) — the per-step-builder
+    # re-ceremony this launcher used to pay under fresh_masks is gone
     seeds = sys_.mask_seeds()
 
     key = jax.random.PRNGKey(args.seed + 1)

@@ -28,9 +28,10 @@ def default_easter(cfg: ModelConfig, enabled: bool = True) -> EasterConfig:
     return EasterConfig(num_passive=3, d_embed=d_embed, enabled=enabled)
 
 
-def make_system(cfg: ModelConfig, easter: Optional[EasterConfig] = None
-                ) -> EasterLM:
-    return EasterLM(cfg=cfg, easter=easter or default_easter(cfg))
+def make_system(cfg: ModelConfig, easter: Optional[EasterConfig] = None,
+                engine: str = "vectorized", mesh=None) -> EasterLM:
+    return EasterLM(cfg=cfg, easter=easter or default_easter(cfg),
+                    engine=engine, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +122,10 @@ def build_train_step(sys: EasterLM, optimizer: str, lr: float = 1e-4,
 
 
 def build_serve_step(sys: EasterLM, shape: InputShape):
+    # mask_seeds() is memoized down to the blinding-level cached ceremony:
+    # building serve + prefill + train steps for one system costs ONE DH
+    # exchange total, fresh_masks or not (freshness lives in the per-round
+    # PRF fold-in, never in the ceremony).
     seeds = sys.mask_seeds()
     wo = _long_ctx_override(sys.cfg, shape)
 

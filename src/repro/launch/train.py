@@ -42,8 +42,12 @@ def main():
     ap.add_argument("--grad-mode", default="easter",
                     choices=["easter", "joint"])
     ap.add_argument("--engine", default="vectorized",
-                    choices=["vectorized", "loop"],
-                    help="passive-party execution: grouped vmap | seed loop")
+                    choices=["vectorized", "sharded", "loop"],
+                    help="passive-party execution: grouped vmap | grouped "
+                         "vmap laid over a party mesh axis | seed loop")
+    ap.add_argument("--party-devices", type=int, default=0,
+                    help="party-axis mesh size for --engine sharded "
+                         "(0 = all local devices)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true",
                     help="restore params/opt state from --ckpt if present")
@@ -58,8 +62,13 @@ def main():
     easter = EasterConfig(num_passive=args.num_passive,
                           d_embed=args.d_embed, mask_mode=args.mask_mode,
                           enabled=not args.no_easter)
+    mesh = None
+    if args.engine == "sharded":
+        from repro.launch.mesh import make_party_mesh
+        mesh = make_party_mesh(args.party_devices or None)
+        print(f"party mesh: {mesh}")
     sys_ = EasterLM(cfg=cfg, easter=easter, grad_mode=args.grad_mode,
-                    engine=args.engine)
+                    engine=args.engine, mesh=mesh)
     print(f"arch={cfg.name} parties={sys_.C} engine={args.engine} "
           f"party_depths={[c.n_layers for c in sys_.party_cfgs]} "
           f"d_embed={easter.d_embed}")

@@ -79,6 +79,54 @@ def constrain(x: jnp.ndarray, spec: Tuple) -> jnp.ndarray:
         x, NamedSharding(mesh, P(*resolved)))
 
 
+# ---------------------------------------------------------------------------
+# party-axis helpers (mesh-sharded party engine)
+#
+# The EASTER protocol is embarrassingly parallel across participants, so the
+# party dimension is a first-class mesh axis: core/party_engine.py lays each
+# group's stacked params and feature slices out over PARTY_AXIS with
+# shard_map and runs embed / decide / assisted-grad steps K-parallel, with
+# the blinded all-gather as the only cross-device collective.
+# ---------------------------------------------------------------------------
+
+PARTY_AXIS = "party"
+
+
+def shard_map_compat(fn, mesh: Mesh, in_specs, out_specs):
+    """Version-robust ``shard_map``: ``jax.shard_map`` where it exists
+    (jax >= 0.6), ``jax.experimental.shard_map`` on the pinned 0.4.x.
+
+    Replication checking is disabled because the 0.4.x rep-checker cannot
+    statically infer that a ``tiled`` all_gather output is replicated (the
+    exact shape of the party engine's blinded uplink); newer jax renamed
+    the kwarg to ``check_vma``, so both spellings are tried.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    except TypeError:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+
+
+def party_axis_size(mesh: Optional[Mesh], axis: str = PARTY_AXIS) -> int:
+    if mesh is None or axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[axis]
+
+
+def party_shardable(mesh: Optional[Mesh], n: int,
+                    axis: str = PARTY_AXIS) -> bool:
+    """True when a party-stacked leading dim of ``n`` can lay out over the
+    party axis (axis present, >1 device, and n divides evenly — uneven
+    groups fall back to replicated vmap execution)."""
+    size = party_axis_size(mesh, axis)
+    return size > 1 and n >= size and n % size == 0
+
+
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

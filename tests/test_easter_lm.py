@@ -79,6 +79,38 @@ def test_vectorized_engine_matches_loop():
             atol=5e-7)
 
 
+@pytest.mark.parametrize("mask_mode", ["float", "int32"])
+def test_serve_prefill_vectorized_matches_loop(mask_mode):
+    """The grouped serve/prefill paths (one vmap over the stacked passive
+    proxies + their caches — no per-party Python loop) must reproduce the
+    loop oracle's prefill embedding, decode logits AND caches
+    bit-for-bit."""
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1,
+                     mask_mode=mask_mode)
+    sv = EasterLM(cfg=cfg, easter=e)
+    sl = EasterLM(cfg=cfg, easter=e, engine="loop")
+    params = sv.init_params(jax.random.PRNGKey(21))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(22), (B, S), 0,
+                              cfg.vocab_size)
+    pos = jnp.asarray(S - 1, jnp.int32)
+    c_v, c_l = sv.init_caches(B, S), sl.init_caches(B, S)
+    E_v, c_v = sv.prefill(params, toks[:, :S - 1], c_v,
+                          seeds=sv.mask_seeds(), round_idx=1)
+    E_l, c_l = sl.prefill(params, toks[:, :S - 1], c_l,
+                          seeds=sl.mask_seeds(), round_idx=1)
+    np.testing.assert_array_equal(np.asarray(E_v), np.asarray(E_l))
+    lg_v, c_v = sv.serve_step(params, toks[:, S - 1:], c_v, pos,
+                              sv.mask_seeds())
+    lg_l, c_l = sl.serve_step(params, toks[:, S - 1:], c_l, pos,
+                              sl.mask_seeds())
+    np.testing.assert_array_equal(np.asarray(lg_v), np.asarray(lg_l))
+    for a, b in zip(jax.tree.leaves(c_v), jax.tree.leaves(c_l)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
 def test_loss_invariant_to_blinding():
     sys = _system()
     params = sys.init_params(jax.random.PRNGKey(1))

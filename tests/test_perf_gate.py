@@ -1,0 +1,147 @@
+"""benchmarks/compare.py — the CI perf gate's regression logic.
+
+Pure-python tests (no jax): synthetic dashboard documents exercise the
+threshold, the calibration normalization, the bytes gate, lost-coverage
+detection, and the schema/config guards.
+"""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare", os.path.join(_ROOT, "benchmarks", "compare.py"))
+cmp_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cmp_mod)
+
+
+def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16)):
+    return {
+        "schema": cmp_mod.SCHEMA,
+        "calibration_ms": cal,
+        "config": {"batch": 32, "rounds": 5, "d_embed": 64,
+                   "n_features": 256, "mask_mode": "float",
+                   "mask_only": False},
+        "rows": [{"C": c, "engine": "vectorized", "batch": 32,
+                  "use_kernel": False, "fused_masks": False,
+                  "round_ms": round_ms, "mask_ms": mask_ms,
+                  "bytes_per_round": bytes_pr} for c in cs],
+    }
+
+
+def test_identical_docs_pass():
+    base = _doc()
+    table, failures = cmp_mod.compare(base, copy.deepcopy(base), 1.5)
+    assert not failures
+    assert len(table) == 2 * 3          # 2 rows x (round, mask, bytes)
+    assert all(r["ok"] for r in table)
+
+
+def test_regression_over_threshold_fails():
+    table, failures = cmp_mod.compare(_doc(round_ms=10.0),
+                                      _doc(round_ms=16.0), 1.5)
+    assert any("round_ms" in f for f in failures)
+    # mask_ms unchanged -> still ok
+    assert all(r["ok"] for r in table if r["metric"] == "mask_ms")
+
+
+def test_slowdown_under_threshold_passes():
+    _, failures = cmp_mod.compare(_doc(round_ms=10.0),
+                                  _doc(round_ms=14.0), 1.5)
+    assert not failures
+
+
+def test_calibration_normalizes_slow_host():
+    """A 2x-slower host (2x calibration) running 2x-slower benchmarks is
+    NOT a regression; the same timings without the calibration excuse
+    are."""
+    base = _doc(round_ms=10.0, mask_ms=1.0, cal=1.0)
+    slow_host = _doc(round_ms=20.0, mask_ms=2.0, cal=2.0)
+    _, failures = cmp_mod.compare(base, slow_host, 1.5)
+    assert not failures
+    really_slow = _doc(round_ms=20.0, mask_ms=2.0, cal=1.0)
+    _, failures = cmp_mod.compare(base, really_slow, 1.5)
+    assert failures
+
+
+def test_calibration_noise_cannot_fabricate_regression():
+    """Unchanged timings + a noisy calibration probe (host looks 2x
+    FASTER, so normalization would inflate ratios) must still pass: the
+    raw ratio exonerates."""
+    base = _doc(round_ms=10.0, mask_ms=1.0, cal=2.0)
+    new = _doc(round_ms=10.0, mask_ms=1.0, cal=1.0)
+    _, failures = cmp_mod.compare(base, new, 1.5)
+    assert not failures
+
+
+def test_per_row_calibration_preferred():
+    """A mid-sweep speed-regime shift recorded by the per-row probe
+    exonerates that row even when the document-level probes agree."""
+    base = _doc(round_ms=10.0, mask_ms=1.0, cal=1.0)
+    new = _doc(round_ms=10.0, mask_ms=1.0, cal=1.0)
+    for r in base["rows"] + new["rows"]:
+        r["cal_ms"] = 1.0
+    new["rows"][0]["round_ms"] = 20.0    # 2x slower...
+    new["rows"][0]["cal_ms"] = 2.0       # ...but so was the host just then
+    _, failures = cmp_mod.compare(base, new, 1.5)
+    assert not failures
+    new["rows"][0]["cal_ms"] = 1.0       # host speed unchanged -> real
+    _, failures = cmp_mod.compare(base, new, 1.5)
+    assert any("round_ms" in f for f in failures)
+
+
+def test_bytes_growth_fails_even_under_threshold():
+    """Wire bytes are deterministic accounting — a 10% growth is a real
+    regression even though 1.1 < 1.5."""
+    _, failures = cmp_mod.compare(_doc(bytes_pr=1000), _doc(bytes_pr=1100),
+                                  1.5)
+    assert any("bytes_per_round" in f for f in failures)
+
+
+def test_missing_row_is_lost_coverage():
+    _, failures = cmp_mod.compare(_doc(cs=(4, 16)), _doc(cs=(4,)), 1.5)
+    assert any("missing" in f for f in failures)
+
+
+def test_config_mismatch_fails():
+    new = _doc()
+    new["config"]["batch"] = 64
+    _, failures = cmp_mod.compare(_doc(), new, 1.5)
+    assert any("config mismatch" in f for f in failures)
+
+
+def test_schema_guard(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": "nope", "rows": [{}]}))
+    with pytest.raises(SystemExit):
+        cmp_mod.load(str(p))
+
+
+def test_main_end_to_end(tmp_path):
+    b, n = tmp_path / "base.json", tmp_path / "new.json"
+    s = tmp_path / "summary.md"
+    b.write_text(json.dumps(_doc()))
+    n.write_text(json.dumps(_doc(round_ms=11.0)))
+    assert cmp_mod.main([str(b), str(n), "--summary", str(s)]) == 0
+    md = s.read_text()
+    assert "Many-party perf gate" in md and "round_ms" in md
+    n.write_text(json.dumps(_doc(round_ms=40.0)))
+    assert cmp_mod.main([str(b), str(n)]) == 1
+
+
+def test_committed_baseline_is_valid():
+    """The baseline the CI gate reads must stay schema-valid and carry
+    the gated metrics + calibration."""
+    path = os.path.join(_ROOT, "benchmarks", "BENCH_many_party.json")
+    doc = cmp_mod.load(path)
+    assert doc["calibration_ms"] > 0
+    assert {r["C"] for r in doc["rows"]} == {4, 16, 64}
+    for r in doc["rows"]:
+        for m in ("round_ms", "mask_ms", "bytes_per_round"):
+            assert m in r, (r.get("C"), m)
+    # and the gate passes against itself
+    table, failures = cmp_mod.compare(doc, copy.deepcopy(doc), 1.5)
+    assert not failures and table
