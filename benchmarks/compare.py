@@ -1,11 +1,13 @@
 """Perf-gate comparator for the many-party scaling dashboard.
 
 Compares a freshly-swept ``BENCH_many_party.json`` (schema
-``easter/many-party-bench/v1``, written by
+``easter/many-party-bench/v2``, written by
 ``many_party_scaling.py --gate --save ...``) against the committed CPU
 baseline ``benchmarks/BENCH_many_party.json`` and FAILS (exit 1) when any
-gated timing regresses by more than ``--threshold`` (default 1.5x), when
-the deterministic wire-bytes accounting grows, or when a baseline row
+gated timing regresses by more than ``--threshold`` (default 1.5x) —
+training round time, mask-synthesis time, and the fused scan-decode
+``decode_ms_per_tok`` (the serve-path tokens/sec row) — when the
+deterministic wire-bytes accounting grows, or when a baseline row
 vanished from the sweep (lost coverage is a regression too).
 
 Timings are normalized by each document's ``calibration_ms`` (a fixed
@@ -28,9 +30,12 @@ import json
 import sys
 from typing import Dict, List, Tuple
 
-SCHEMA = "easter/many-party-bench/v1"
-# wall-clock metrics gated at --threshold (calibration-normalized)
-GATED_MS = ("round_ms", "mask_ms")
+SCHEMA = "easter/many-party-bench/v2"
+# wall-clock metrics gated at --threshold (calibration-normalized);
+# rows carry only the metrics that apply to them (a kind="decode" row
+# has decode_ms_per_tok, a training row round_ms/mask_ms) — absent
+# baseline metrics are skipped per row
+GATED_MS = ("round_ms", "mask_ms", "decode_ms_per_tok")
 # bytes_per_round is deterministic integer accounting with zero noise:
 # ANY growth is a wire-format regression, so the gate is exact equality
 BYTES_TOL = 1.0
@@ -48,8 +53,8 @@ def load(path: str) -> dict:
 
 
 def row_key(r: dict) -> Tuple:
-    return (r["C"], r["engine"], r.get("use_kernel", False),
-            r.get("fused_masks", False))
+    return (r.get("kind", "train"), r["C"], r["engine"],
+            r.get("use_kernel", False), r.get("fused_masks", False))
 
 
 def compare(base: dict, new: dict, threshold: float

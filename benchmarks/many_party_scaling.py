@@ -26,8 +26,11 @@ fresh round index). ``--mask-only`` skips the training-round timing, for
 sweeping mask synthesis to C=128 on both engines cheaply.
 
 ``--save`` writes the tracked perf-dashboard document (schema
-``easter/many-party-bench/v1``): per-C round/mask timings + wire
-bytes/round, plus a host-speed calibration scalar so the CI gate
+``easter/many-party-bench/v2``): per-C round/mask timings + wire
+bytes/round, a fused scan-decode throughput row (``kind="decode"``:
+``decode_ms_per_tok`` / ``tokens_per_s`` of ``EasterLM.serve_tokens``,
+core/decode.py, at LLM smoke scale — the serve-path metric the decode
+tentpole optimizes), plus a host-speed calibration scalar so the CI gate
 (``benchmarks/compare.py``, committed baseline
 ``benchmarks/BENCH_many_party.json``) can normalize across runner speeds.
 ``--gate`` is the exact preset the CI perf-gate job sweeps.
@@ -139,7 +142,74 @@ def time_rounds(sys, nf, batch: int, rounds: int, seed: int = 0) -> dict:
             "n_groups": sys._eng.n_groups}
 
 
-SCHEMA = "easter/many-party-bench/v1"
+SCHEMA = "easter/many-party-bench/v2"
+
+# the decode row's fixed shape: LLM smoke scale, C=4 (the paper's party
+# count). MUST stay in sync with the committed baseline's config block.
+DECODE_BATCH, DECODE_PROMPT, DECODE_ARCH = 2, 8, "qwen2.5-3b"
+
+
+def time_decode(gen: int, engine: str = "vectorized", reps: int = 3) -> dict:
+    """Fused scan-decode throughput: ``EasterLM.serve_tokens`` (ONE
+    compiled ``lax.scan`` over ``gen`` EASTER serve rounds, blinded
+    uplink per step — core/decode.py) at LLM smoke scale.
+
+    ``decode_ms_per_tok`` (min-of-reps steady state) is the gated
+    metric; ``tokens_per_s`` is the dashboard-friendly inverse
+    (batch-scaled). The timing loop replays one prefilled cache state,
+    so the builder runs with ``donate_caches=False`` (donation would
+    consume the caches on the first call; the dispatch count — one per
+    generation — is identical either way)."""
+    from repro.configs.base import get_config, smoke_variant
+    from repro.core import decode as decode_mod
+    from repro.core.easter_lm import EasterLM
+
+    cfg = smoke_variant(get_config(DECODE_ARCH))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1)
+    lm = EasterLM(cfg=cfg, easter=e, engine=engine)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    seeds = lm.mask_seeds()
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (DECODE_BATCH, DECODE_PROMPT), 0,
+                              cfg.vocab_size)
+    caches = lm.init_caches(DECODE_BATCH, DECODE_PROMPT + gen)
+    prefill = jax.jit(lambda p, t, c: lm.prefill(p, t, c, seeds=seeds,
+                                                 round_idx=0))
+    _, caches = prefill(params, toks[:, :-1], caches)
+    jax.block_until_ready(jax.tree.leaves(caches)[0])
+    fn = decode_mod.build_serve_tokens(lm, gen, temperature=0.0,
+                                       donate_caches=False)
+    pos = jnp.asarray(DECODE_PROMPT - 1, jnp.int32)
+    key = jax.random.PRNGKey(2)
+    t0 = time.perf_counter()
+    out = fn(params, toks[:, -1:], caches, pos, key)
+    jax.block_until_ready(out[0])
+    compile_s = time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(params, toks[:, -1:], caches, pos, key)
+        jax.block_until_ready(out[0])
+        best = min(best, time.perf_counter() - t0)
+    row = {"kind": "decode", "C": 4, "engine": engine,
+           "batch": DECODE_BATCH, "gen": gen,
+           "decode_ms_per_tok": best * 1e3 / gen,
+           "tokens_per_s": DECODE_BATCH * gen / best,
+           "compile_s": compile_s,
+           "cal_ms": calibration_ms(20)}
+    if engine == "sharded":
+        # record what actually ran (cf. the train rows): K=3 passives on
+        # a non-dividing or 1-device axis degrade to plain vmap — don't
+        # pass vectorized numbers off as a sharded measurement
+        from repro import sharding as shard_rules
+        ok = lm._shard_ok()
+        row["party_devices"] = (shard_rules.party_axis_size(lm.party_mesh)
+                                if ok else 1)
+        if not ok:
+            print("many_party decode engine=sharded WARNING: passive "
+                  "group does not divide the party axis — row measures "
+                  "the vectorized fallback")
+    return row
 
 
 def calibration_ms(reps: int = 50) -> float:
@@ -166,7 +236,7 @@ def calibration_ms(reps: int = 50) -> float:
 
 
 _MIN_MERGE = ("setup_s", "mask_first_ms", "mask_ms", "round_ms",
-              "compile_s", "cal_ms")
+              "compile_s", "cal_ms", "decode_ms_per_tok")
 
 
 def _merge_min(prev: dict, new: dict) -> dict:
@@ -180,14 +250,34 @@ def _merge_min(prev: dict, new: dict) -> dict:
             out[k] = min(prev[k], new[k])
     if "round_ms" in out and out["round_ms"] > 0:
         out["rounds_per_s"] = 1e3 / out["round_ms"]
+    if "decode_ms_per_tok" in out and out["decode_ms_per_tok"] > 0:
+        out["tokens_per_s"] = out["batch"] * 1e3 / out["decode_ms_per_tok"]
     return out
 
 
 def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
         mask_mode, loop_max_c, fused_masks=False, mask_only=False,
-        save=None, repeat=1):
+        save=None, repeat=1, decode_gen=0):
     merged = {}
     for rep in range(repeat):
+        if decode_gen and not mask_only:
+            # fused scan-decode throughput (serve path; see time_decode).
+            # Swept once per pass like every other cell so the min-merge
+            # defeats host speed-regime drift. The row follows the
+            # sweep's engine when unambiguous; mixed sweeps (and the CI
+            # gate) pin the vectorized engine.
+            dec_eng = engines[0] if len(set(engines)) == 1 else "vectorized"
+            r = time_decode(decode_gen, engine=dec_eng)
+            k_dec = ("decode", r["engine"])
+            merged[k_dec] = (r if k_dec not in merged
+                             else _merge_min(merged[k_dec], r))
+            rm = merged[k_dec]
+            print(f"many_party decode engine={r['engine']:10s} "
+                  f"gen {decode_gen:3d} x{r['batch']}  "
+                  f"{rm['decode_ms_per_tok']:8.2f} ms/tok  "
+                  f"({rm['tokens_per_s']:6.1f} tok/s)  "
+                  f"compile {r['compile_s']:6.1f} s"
+                  + (f"  [pass {rep + 1}/{repeat}]" if repeat > 1 else ""))
         for C in cs:
             for eng in engines:
                 if eng == "loop" and C > loop_max_c:
@@ -251,7 +341,10 @@ def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
             "calibration_ms": calibration_ms(),
             "config": {"batch": batch, "rounds": rounds, "d_embed": d_embed,
                        "n_features": n_feat_total, "mask_mode": mask_mode,
-                       "mask_only": mask_only},
+                       "mask_only": mask_only,
+                       "decode": {"gen": decode_gen, "batch": DECODE_BATCH,
+                                  "prompt": DECODE_PROMPT,
+                                  "arch": DECODE_ARCH}},
             "rows": rows,
         }
         os.makedirs(os.path.dirname(save) or ".", exist_ok=True)
@@ -289,6 +382,9 @@ def main():
                     help="time mask synthesis only (skip training rounds)")
     ap.add_argument("--loop-max-c", type=int, default=16,
                     help="skip the loop engine above this C")
+    ap.add_argument("--decode-gen", type=int, default=16,
+                    help="tokens per fused scan-decode throughput row "
+                         "(0 = skip the decode row)")
     ap.add_argument("--repeat", type=int, default=1,
                     help="sweep every cell this many times (min-merged) — "
                          "defeats minute-scale host speed-regime drift")
@@ -299,11 +395,13 @@ def main():
         # compare.py refuses to gate across mismatched configs
         cs, engines = [4, 16, 64], ["vectorized"]
         a.batch, a.rounds, a.n_features, a.d_embed = 32, 5, 256, 64
+        a.decode_gen = 16
         a.repeat = max(a.repeat, 2)
         save = a.save
     elif a.smoke:
         cs, engines = [64], ["vectorized"]
         a.batch, a.rounds, a.n_features = 32, 5, 256
+        a.decode_gen = 0
         save = None
     else:
         cs = [int(c) for c in a.cs.split(",")]
@@ -313,7 +411,7 @@ def main():
     run(cs, engines, a.batch, a.rounds, a.d_embed, a.n_features,
         a.use_kernel, a.mask_mode, a.loop_max_c,
         fused_masks=a.fused_masks, mask_only=a.mask_only, save=save,
-        repeat=a.repeat)
+        repeat=a.repeat, decode_gen=a.decode_gen)
 
 
 if __name__ == "__main__":

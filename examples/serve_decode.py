@@ -1,9 +1,19 @@
-"""Batched-request EASTER serving example: prefill a batch of prompts then
-stream tokens, one aggregated-embedding round per step.
+"""Batched-request EASTER serving example: prefill a batch of prompts,
+then generate every token inside ONE fused scan-decode dispatch
+(core/decode.py) — one aggregated-embedding round per step, with every
+party's KV cache threaded as device-resident scan carry and the cache
+buffers donated to the compiled program.
 
     PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
+    PYTHONPATH=src python examples/serve_decode.py --gen 32 --step-loop
+
+``--step-loop`` replays the pre-scan driver (one jitted serve_step
+dispatch per token) for an A/B comparison; both print tokens/sec and
+sample the same token ids (proven bit-exact in
+tests/test_decode_scan.py).
 """
 import argparse
+import os
 import subprocess
 import sys
 
@@ -11,12 +21,26 @@ import sys
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-2.7b")
+    ap.add_argument("--gen", type=int, default=16,
+                    help="tokens to generate (= fused scan length)")
+    ap.add_argument("--engine", default="vectorized",
+                    choices=["vectorized", "sharded", "loop"])
+    ap.add_argument("--step-loop", action="store_true",
+                    help="decode one jitted serve_step at a time instead "
+                         "of the fused scan (A/B reference)")
     a = ap.parse_args()
     # thin alias of the serving launcher with example-friendly defaults
-    sys.exit(subprocess.call(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", a.arch,
-         "--smoke", "--batch", "4", "--prompt-len", "24", "--gen", "16"],
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}))
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", a.arch,
+           "--smoke", "--batch", "4", "--prompt-len", "24",
+           "--gen", str(a.gen), "--engine", a.engine]
+    if a.step_loop:
+        cmd.append("--step-loop")
+    # inherit the full environment (JAX_PLATFORMS, XLA_FLAGS, ... — a
+    # stripped env makes jax probe every backend, incl. hanging on
+    # libtpu where it is installed) and just prepend src/ to the path
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    sys.exit(subprocess.call(cmd, env=env))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,148 @@
+"""Fused multi-token decode: N EASTER serve rounds in ONE ``lax.scan``.
+
+The step-at-a-time serving loop (one jitted ``EasterLM.serve_step`` per
+generated token) pays a host round-trip per step: every party's KV cache
+exits the jit boundary, bounces through Python, and re-enters on the next
+dispatch. ``serve_tokens`` fuses the whole generation into a single
+compiled program — one trace, one compile, one dispatch — with the caches,
+the sampled token, the position (which doubles as the fresh-mask PRF round
+counter, ``blinding.SERVE_DOMAIN + pos``) and the sampling PRNG key all
+threaded as scan carry. ``build_serve_tokens`` additionally donates the
+cache buffers (``jax.jit(..., donate_argnums=...)``), so generation
+updates the caches in place and they stay device-resident end to end.
+
+The scan body IS ``EasterLM.serve_step`` — not a reimplementation — so
+every execution engine rides along unchanged:
+
+  * ``loop``        — the per-party oracle, unrolled inside the body;
+  * ``vectorized``  — the stacked-passive group under one ``jax.vmap``;
+  * ``sharded``     — in-shard blinding under ``shard_map``, with the
+    tiled all-gather of the BLINDED uplink as the only party-axis
+    collective, once per scan step.
+
+and the per-step blinding semantics are inherited verbatim: step i of a
+scan started at position p blinds under PRF round ``SERVE_DOMAIN + p + i``
+(see ``serve_round_schedule``), exactly the schedule the step-at-a-time
+loop produces. tests/test_decode_scan.py pins bit-exactness of tokens,
+logits and final caches against the step loop for all three engines,
+float and int32 wire formats, fresh_masks on and off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blinding
+
+
+def serve_round_schedule(pos, n_steps: int) -> jnp.ndarray:
+    """PRF round indices a fused decode visits: SERVE_DOMAIN + pos + i.
+
+    This is the contract between the scan carry and the mask engine —
+    step i blinds under exactly the round the step-at-a-time loop would
+    have used at position ``pos + i``. Audited against the step loop's
+    per-step masks in tests/test_decode_scan.py. (With
+    ``fresh_masks=False`` the schedule is irrelevant by design: every
+    round collapses to the paper's single static pad.)
+    """
+    return (blinding.SERVE_DOMAIN + jnp.asarray(pos, jnp.int32)
+            + jnp.arange(n_steps, dtype=jnp.int32))
+
+
+def sample_token(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+    """One sampling decision: logits (B, V) -> tokens (B, 1) int32.
+
+    ``temperature <= 0`` is greedy argmax (no randomness consumed);
+    otherwise temperature-scaled categorical sampling. Kept as a free
+    function so the step-loop driver and the fused scan share one
+    definition — parity tests compare the two drivers through it.
+    """
+    if temperature > 0:
+        return jax.random.categorical(
+            key, logits / temperature)[:, None].astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+
+def serve_tokens(sys, params, tokens, caches, pos, n_steps: int, seeds, *,
+                 key=None, temperature: float = 0.0,
+                 window_override: int = -1, fe_list=None,
+                 return_logits: bool = False):
+    """Generate ``n_steps`` tokens in one ``lax.scan`` (one trace/compile).
+
+    Args:
+      sys: the ``EasterLM`` system (any engine).
+      params / caches: as for ``serve_step``; ``caches`` must already hold
+        the prefilled prompt state (see ``EasterLM.prefill``).
+      tokens: (B, 1) int32 — the last prompt token (its logits produce the
+        first generated token, as in the step-at-a-time driver).
+      pos: scalar int32 position of ``tokens`` in the sequence; also the
+        base of the fresh-mask PRF round schedule (``serve_round_schedule``).
+      n_steps: static Python int — the scan length.
+      seeds: mask-synthesis state from ``sys.mask_seeds()`` (None =
+        unblinded oracle).
+      key: PRNG key for sampling; required when ``temperature > 0``.
+      return_logits: additionally return the per-step logits (B, N, V) —
+        parity-test / distillation hook; costs (N, B, V) device memory.
+
+    Returns ``(out_tokens, caches, pos, key)`` with ``out_tokens``
+    (B, n_steps) int32 and ``pos``/``key``/``caches`` advanced past the
+    generation (ready for a further ``serve_tokens`` call — chunked
+    generation composes); with ``return_logits``, a trailing ``logits``
+    element is appended.
+    """
+    if temperature > 0 and key is None:
+        raise ValueError("temperature > 0 sampling needs a PRNG key")
+    if key is None:
+        # carried for a uniform carry structure, never consumed (greedy)
+        key = jax.random.PRNGKey(0)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def body(carry, _):
+        tok, cc, p, k = carry
+        logits, cc = sys.serve_step(params, tok, cc, p, seeds,
+                                    window_override=window_override,
+                                    fe_list=fe_list)
+        k, sub = jax.random.split(k)
+        nxt = sample_token(logits[:, -1], sub, temperature)
+        ys = (nxt, logits[:, -1]) if return_logits else nxt
+        return (nxt, cc, p + 1, k), ys
+
+    (tok, caches, pos, key), ys = jax.lax.scan(
+        body, (tokens, caches, pos, key), None, length=n_steps)
+    if return_logits:
+        toks, logits = ys
+    else:
+        toks, logits = ys, None
+    out = jnp.moveaxis(toks[..., 0], 0, 1)            # (N, B, 1) -> (B, N)
+    if return_logits:
+        return out, caches, pos, key, jnp.moveaxis(logits, 0, 1)
+    return out, caches, pos, key
+
+
+def build_serve_tokens(sys, n_steps: int, *, temperature: float = 0.0,
+                       window_override: int = -1, fe_list=None,
+                       donate_caches: bool = True,
+                       return_logits: bool = False):
+    """Jitted fused-decode step: ``fn(params, tokens, caches, pos, key)``.
+
+    The ONE DH ceremony is resolved here (``sys.mask_seeds()`` is memoized
+    down to the blinding-level cache, shared with the train/prefill step
+    builders), and the cache argument is donated so XLA aliases the input
+    cache buffers to the output ones: generation mutates the caches on
+    device instead of round-tripping a fresh copy per call. Donated
+    buffers are CONSUMED — the caller must rebind ``caches`` to the
+    returned pytree and never touch the donated arrays again (pass
+    ``donate_caches=False`` for benchmark loops that replay one cache
+    state). On backends without donation support (CPU) XLA silently falls
+    back to copying; the aliasing is still recorded in the lowering
+    (pinned by tests/test_decode_scan.py).
+    """
+    seeds = sys.mask_seeds()
+
+    def run(params, tokens, caches, pos, key):
+        return serve_tokens(sys, params, tokens, caches, pos, n_steps,
+                            seeds, key=key, temperature=temperature,
+                            window_override=window_override,
+                            fe_list=fe_list, return_logits=return_logits)
+
+    return jax.jit(run, donate_argnums=(2,) if donate_caches else ())

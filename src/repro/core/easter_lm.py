@@ -153,14 +153,35 @@ class EasterLM:
         """seeds: None | MaskEngine | pair-seed dict (loop oracle).
         ``mesh``: per-group mask sharding — the MaskEngine synthesizes
         each device's party rows in-shard, so masks are born laid out
-        over the party axis (sharded engine only)."""
+        over the party axis (sharded engine only).
+
+        With ``fresh_masks=False`` and a TRACED round index, the static
+        round is lowered as ``round_idx * barrier(0)`` — value 0 every
+        round (the paper's single static pad), but opaque to XLA's
+        constant folder. Lowering it as a literal 0 made the pads
+        compile-time constants, and XLA folded them (and re-fused their
+        consumers) DIFFERENTLY inside the fused decode scan
+        (core/decode.py) than in a step-at-a-time jit — ~1e-6 float
+        drift between two drivers of the SAME protocol. The traced zero
+        keeps the PRF chain in the step body in both drivers, so they
+        lower identically (bit-exactness pinned in
+        tests/test_decode_scan.py) at the cost of re-synthesizing the
+        static pad per round, which the default fresh-mask mode pays
+        anyway."""
         if seeds is None:
             return None
-        r = round_idx if self.easter.fresh_masks else 0
+        if self.easter.fresh_masks:
+            r = round_idx
+        elif isinstance(round_idx, jnp.ndarray):
+            r = round_idx * jax.lax.optimization_barrier(
+                jnp.zeros((), jnp.int32))
+        else:
+            r = 0
         if isinstance(seeds, blinding.MaskEngine):
             return seeds.masks(shape, r, self.easter.mask_mode, mesh=mesh)
         return blinding.all_party_masks(
-            self.easter.num_passive, seeds, shape, r, self.easter.mask_mode)
+            self.easter.num_passive, seeds, shape, r,
+            self.easter.mask_mode)
 
     def decide_hidden(self, pparams, pcfg: ModelConfig, E):
         x = E
@@ -385,9 +406,32 @@ class EasterLM:
                                        window_override)
                 for pcfg in self.party_cfgs]
 
+    def serve_tokens(self, params, tokens, caches, pos, n_steps: int,
+                     seeds, *, key=None, temperature: float = 0.0,
+                     window_override: int = -1, fe_list=None,
+                     return_logits: bool = False):
+        """Fused multi-token decode: ``n_steps`` serve rounds in ONE
+        ``lax.scan`` — the production generation path (one trace, one
+        compile, caches device-resident as scan carry; see
+        ``core/decode.py`` and ``decode.build_serve_tokens`` for the
+        jitted, cache-donating form). The scan body is ``serve_step``
+        itself, so engines and per-step blinding semantics are inherited
+        verbatim and proven bit-exact against the step-at-a-time loop."""
+        from repro.core import decode
+        return decode.serve_tokens(
+            self, params, tokens, caches, pos, n_steps, seeds, key=key,
+            temperature=temperature, window_override=window_override,
+            fe_list=fe_list, return_logits=return_logits)
+
     def serve_step(self, params, tokens, caches, pos, seeds,
                    window_override: int = -1, fe_list=None):
         """One decode step: tokens (B,1). Returns (active logits, caches).
+
+        Production generation drives N of these inside a single
+        ``lax.scan`` via ``serve_tokens`` / ``core/decode.py`` — prefer
+        that path (step-at-a-time jit dispatch re-enters every passive KV
+        cache through the jit boundary per token). This single-step form
+        is the oracle the fused scan is proven bit-exact against.
 
         The decode uplink is blinded through the SAME _aggregate plumbing
         as training — the paper's trust model (§IV-B/C) holds at inference
@@ -503,6 +547,11 @@ class EasterLM:
                 fe_list=None, seeds=None, round_idx=0):
         """Cache-building forward over the prompt; returns (E, caches).
 
+        The returned caches are the scan carry ``serve_tokens`` (the fused
+        production decode, core/decode.py) starts from — hand them
+        straight to ``decode.build_serve_tokens``'s jitted fn, which
+        donates them so the whole generation stays device-resident.
+
         The prompt-phase uplink crosses the same trust boundary as every
         other round, so it is blinded through _aggregate like training and
         decode (a previous version aggregated RAW passive embeddings with
@@ -558,7 +607,10 @@ class EasterLM:
 
         With a stackable passive group the K proxy encoders run under one
         vmap instead of a per-party loop (they share a config, so their
-        K/V shapes match)."""
+        K/V shapes match). The returned ``fe_list`` is computed ONCE per
+        request and closed over by the fused decode scan
+        (``serve_tokens``'s ``fe_list=``) — it is read-only per step, so
+        it rides as a scan constant, not carry."""
 
         def one_kv(bp, pcfg):
             enc_out = transformer.encode(bp, audio_embed, pcfg)

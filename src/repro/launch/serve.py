@@ -2,6 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
         --batch 4 --prompt-len 32 --gen 32
+
+Generation runs through the fused scan-decode engine (core/decode.py):
+the whole --gen generation is ONE compiled program — caches, position
+(= the fresh-mask PRF round counter) and the sampling key threaded as
+scan carry, cache buffers donated so they stay device-resident end to
+end. ``--step-loop`` keeps the pre-scan driver (one jitted serve_step
+dispatch per token) for A/B timing and as the bit-exactness oracle the
+fused path is tested against (tests/test_decode_scan.py).
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import EasterConfig, get_config, smoke_variant
+from repro.core import decode as decode_mod
 from repro.core.easter_lm import EasterLM
 
 
@@ -33,6 +42,10 @@ def main():
     ap.add_argument("--party-devices", type=int, default=0,
                     help="party-axis mesh size for --engine sharded "
                          "(0 = all local devices)")
+    ap.add_argument("--step-loop", action="store_true",
+                    help="drive decode one jitted serve_step at a time "
+                         "(the pre-scan path; A/B reference for the "
+                         "fused scan engine)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -69,28 +82,46 @@ def main():
     jax.block_until_ready(jax.tree.leaves(caches)[0])
     t_prefill = time.perf_counter() - t0
 
-    serve = jax.jit(lambda p, t, c, pos: sys_.serve_step(p, t, c, pos,
-                                                         seeds))
     tok = prompt[:, -1:]
-    out_tokens = [prompt]
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        pos = jnp.asarray(args.prompt_len + i - 1, jnp.int32)
-        logits, caches = serve(params, tok, caches, pos)
-        key, sub = jax.random.split(key)
-        if args.temperature > 0:
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    seq = np.asarray(jnp.concatenate(out_tokens, axis=1))
+    pos = jnp.asarray(args.prompt_len - 1, jnp.int32)
+    if args.step_loop:
+        serve = jax.jit(lambda p, t, c, po, k: _serve_sample_step(
+            sys_, p, t, c, po, k, seeds, args.temperature))
+        out = []
+        t0 = time.perf_counter()
+        for i in range(args.gen):
+            tok, caches, key = serve(params, tok, caches, pos, key)
+            pos = pos + 1
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        gen_toks = jnp.concatenate(out, axis=1)
+        mode = f"step-loop ({args.gen} jit dispatches)"
+    else:
+        fn = decode_mod.build_serve_tokens(
+            sys_, args.gen, temperature=args.temperature,
+            donate_caches=True)
+        t0 = time.perf_counter()
+        gen_toks, caches, pos, key = fn(params, tok, caches, pos, key)
+        jax.block_until_ready(gen_toks)
+        dt = time.perf_counter() - t0
+        mode = "fused scan (1 dispatch, caches donated; incl. compile)"
+    seq = np.asarray(jnp.concatenate([prompt, gen_toks], axis=1))
     print(f"prefill {args.prompt_len} tok x{B}: {t_prefill * 1e3:.1f} ms")
     print(f"decode  {args.gen} steps x{B}: {dt * 1e3:.1f} ms "
-          f"({B * args.gen / dt:.1f} tok/s)")
+          f"({B * args.gen / dt:.1f} tok/s) [{mode}]")
     print("sample token ids (first row):", seq[0, :24].tolist(), "...")
+
+
+def _serve_sample_step(sys_, params, tok, caches, pos, key, seeds,
+                       temperature):
+    """One pre-scan decode dispatch: serve_step + the shared sampling op
+    (decode.sample_token — the same definition the fused scan uses, so
+    the two drivers are comparable token-for-token)."""
+    logits, caches = sys_.serve_step(params, tok, caches, pos, seeds)
+    key, sub = jax.random.split(key)
+    tok = decode_mod.sample_token(logits[:, -1], sub, temperature)
+    return tok, caches, key
 
 
 if __name__ == "__main__":

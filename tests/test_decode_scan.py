@@ -1,0 +1,292 @@
+"""Fused scan decode (core/decode.py) vs the step-at-a-time serve loop.
+
+``EasterLM.serve_tokens`` runs N decode rounds inside ONE ``lax.scan``
+with caches / position / PRF round counter / sampling key as scan carry.
+It must be BIT-EXACT against a Python loop over ``serve_step`` — same
+tokens, same per-step logits, same final caches — for every engine
+(loop oracle, vectorized, sharded party mesh), both wire formats (float
+and int32) and fresh_masks on/off; the per-step masks synthesized INSIDE
+the scan must follow exactly the step loop's PRF round schedule
+(SERVE_DOMAIN + pos + i); and the jitted production form must donate the
+cache buffers and lower to a single fused dispatch (one top-level scan,
+caches threaded as carry — no per-step jit boundary for them to cross).
+"""
+import os
+
+import numpy as np
+import pytest
+
+# the sharded-engine cases need >1 host device; harmless if already set
+N_DEV = 4
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={N_DEV}"
+
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro.configs.base import (EasterConfig, get_config,    # noqa: E402
+                                smoke_variant)
+from repro.core import aggregation, blinding, decode         # noqa: E402
+from repro.core.easter_lm import EasterLM                    # noqa: E402
+
+B, S, GEN = 2, 8, 4
+D_EMBED = 64
+POS0 = S - 1            # decode starts at the last prompt token
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < N_DEV,
+    reason="requires multi-device host (XLA_FLAGS set after jax init)")
+
+ENGINES = ["loop", "vectorized", pytest.param("sharded", marks=needs_mesh)]
+
+
+def _lm(engine, mask_mode="float", fresh_masks=True):
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    # num_passive=4 divides the 4-way party axis, so engine="sharded"
+    # actually shards (and engine parity is not vacuous)
+    e = EasterConfig(num_passive=4, d_embed=D_EMBED, decision_layers=1,
+                     mask_mode=mask_mode, fresh_masks=fresh_masks)
+    return EasterLM(cfg=cfg, easter=e, engine=engine)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Params / prompt shared by every (engine, mode) cell — init_params
+    is independent of engine and mask_mode."""
+    sys_ = _lm("vectorized")
+    params = sys_.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              sys_.cfg.vocab_size)
+    return params, toks
+
+
+def _prefilled(sys_, params, toks, seeds):
+    caches = sys_.init_caches(B, S + GEN)
+    _, caches = sys_.prefill(params, toks[:, :S - 1], caches, seeds=seeds,
+                             round_idx=5)
+    return caches
+
+
+def _step_loop(sys_, params, tok, caches, n, seeds, key,
+               temperature=0.0):
+    """The pre-scan driver: ONE jitted serve_step + sample per token,
+    exactly what launch/serve.py ran before the fused scan existed (the
+    jit matters: the scan body is compiled, so the oracle must be too —
+    an eager loop differs by fp fusion noise, not protocol)."""
+
+    @jax.jit
+    def step(params, tok, caches, pos, key):
+        logits, caches = sys_.serve_step(params, tok, caches, pos, seeds)
+        key, sub = jax.random.split(key)
+        nxt = decode.sample_token(logits[:, -1], sub, temperature)
+        return nxt, caches, key, logits[:, -1]
+
+    toks, logits_all = [], []
+    pos = jnp.asarray(POS0, jnp.int32)
+    for _ in range(n):
+        tok, caches, key, lg = step(params, tok, caches, pos, key)
+        toks.append(tok)
+        logits_all.append(lg)
+        pos = pos + 1
+    return (jnp.concatenate(toks, 1), caches, pos, key,
+            jnp.stack(logits_all, 1))
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity: scan decode == step loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("mask_mode", ["float", "int32"])
+@pytest.mark.parametrize("fresh_masks", [True, False])
+def test_scan_matches_step_loop(setup, engine, mask_mode, fresh_masks):
+    params, toks = setup
+    sys_ = _lm(engine, mask_mode, fresh_masks)
+    seeds = sys_.mask_seeds()
+    key = jax.random.PRNGKey(7)
+    tok0 = toks[:, S - 1:]
+
+    c_scan = _prefilled(sys_, params, toks, seeds)
+    out, c_scan, pos, key_out, lg = sys_.serve_tokens(
+        params, tok0, c_scan, POS0, GEN, seeds, key=key,
+        return_logits=True)
+
+    c_ref = _prefilled(sys_, params, toks, seeds)
+    out_r, c_ref, pos_r, key_r, lg_r = _step_loop(
+        sys_, params, tok0, c_ref, GEN, seeds, key)
+
+    assert out.shape == (B, GEN)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lg_r))
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos_r))
+    np.testing.assert_array_equal(np.asarray(key_out), np.asarray(key_r))
+    _assert_trees_equal(c_scan, c_ref)
+
+
+def test_scan_matches_step_loop_sampled(setup):
+    """Temperature sampling consumes the carried key exactly like the
+    step loop (same split-per-step discipline)."""
+    params, toks = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    key = jax.random.PRNGKey(11)
+    tok0 = toks[:, S - 1:]
+    c1 = _prefilled(sys_, params, toks, seeds)
+    out, _, _, _ = sys_.serve_tokens(params, tok0, c1, POS0, GEN, seeds,
+                                     key=key, temperature=0.7)
+    c2 = _prefilled(sys_, params, toks, seeds)
+    out_r, _, _, _, _ = _step_loop(sys_, params, tok0, c2, GEN, seeds, key,
+                                   temperature=0.7)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_r))
+    with pytest.raises(ValueError):     # sampled mode requires a key
+        sys_.serve_tokens(params, tok0, c2, POS0, GEN, seeds,
+                          temperature=0.7)
+
+
+def test_chunked_generation_composes(setup):
+    """Two N/2 scans chained through the returned (caches, pos, key)
+    carry equal one N scan — the handoff state is complete."""
+    params, toks = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    key = jax.random.PRNGKey(13)
+    tok0 = toks[:, S - 1:]
+    c1 = _prefilled(sys_, params, toks, seeds)
+    out, cf, pos, _ = sys_.serve_tokens(params, tok0, c1, POS0, GEN, seeds,
+                                        key=key)
+    c2 = _prefilled(sys_, params, toks, seeds)
+    o1, c2, p1, k1 = sys_.serve_tokens(params, tok0, c2, POS0, GEN // 2,
+                                       seeds, key=key)
+    o2, c2, p2, _ = sys_.serve_tokens(params, o1[:, -1:], c2, p1,
+                                      GEN - GEN // 2, seeds, key=k1)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(jnp.concatenate([o1, o2], 1)))
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(p2))
+    _assert_trees_equal(cf, c2)
+
+
+# ---------------------------------------------------------------------------
+# mask-schedule audit: per-step masks INSIDE the scan == step-loop PRF
+# counters (SERVE_DOMAIN + pos + i)
+# ---------------------------------------------------------------------------
+
+
+def test_scan_mask_schedule_matches_step_loop(setup, monkeypatch):
+    """Capture the masks the fused scan ACTUALLY blinds with (via an
+    ordered debug callback inside the traced body) and pin them to the
+    step loop's schedule — bit-exact output parity alone would not prove
+    this, because the pairwise masks cancel in the aggregate."""
+    params, toks = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    captured = []
+    orig = aggregation.blind_and_aggregate
+
+    def spy(E_all, masks, **kw):
+        if masks is not None:
+            jax.debug.callback(
+                lambda m: captured.append(np.asarray(m)), masks,
+                ordered=True)
+        return orig(E_all, masks, **kw)
+
+    monkeypatch.setattr(aggregation, "blind_and_aggregate", spy)
+    caches = _prefilled(sys_, params, toks, None)   # unblinded prefill
+    out, *_ = sys_.serve_tokens(params, toks[:, S - 1:], caches, POS0,
+                                GEN, seeds)
+    jax.effects_barrier()
+    assert len(captured) == GEN
+    sched = decode.serve_round_schedule(POS0, GEN)
+    np.testing.assert_array_equal(
+        np.asarray(sched),
+        blinding.SERVE_DOMAIN + POS0 + np.arange(GEN))
+    for i in range(GEN):
+        want = sys_.masks_for((B, 1, D_EMBED), int(sched[i]), seeds)
+        np.testing.assert_array_equal(captured[i], np.asarray(want))
+    # and the schedule is injective across steps (fresh pad per token)
+    flat = [m.tobytes() for m in captured]
+    assert len(set(flat)) == GEN
+
+
+def test_static_masks_reuse_single_pad(setup):
+    """fresh_masks=False (the paper-literal mode): every scan step blinds
+    under the SAME static pad — documented semantics, audited so a
+    schedule regression can't silently flip it."""
+    params, toks = setup
+    sys_ = _lm("vectorized", fresh_masks=False)
+    seeds = sys_.mask_seeds()
+    m0 = sys_.masks_for((B, 1, D_EMBED), blinding.SERVE_DOMAIN + POS0,
+                        seeds)
+    m1 = sys_.masks_for((B, 1, D_EMBED),
+                        blinding.SERVE_DOMAIN + POS0 + 3, seeds)
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+
+
+# ---------------------------------------------------------------------------
+# structure: one fused dispatch, caches donated
+# ---------------------------------------------------------------------------
+
+
+def test_single_toplevel_scan_carries_caches(setup):
+    """The whole generation is ONE top-level scan of length N whose carry
+    threads every cache leaf — i.e. no per-step jit boundary exists for
+    the caches to round-trip through."""
+    params, toks = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    caches = _prefilled(sys_, params, toks, seeds)
+    key = jax.random.PRNGKey(3)
+    closed = jax.make_jaxpr(
+        lambda p, t, c, pos, k: decode.serve_tokens(
+            sys_, p, t, c, pos, GEN, seeds, key=k))(
+        params, toks[:, S - 1:], caches, jnp.asarray(POS0, jnp.int32), key)
+    scans = [e for e in closed.jaxpr.eqns if e.primitive.name == "scan"
+             and e.params["length"] == GEN]
+    assert len(scans) == 1, "decode must lower to one fused scan"
+    n_cache_leaves = len(jax.tree.leaves(caches))
+    # carry = token + every cache leaf + pos + key
+    assert scans[0].params["num_carry"] == n_cache_leaves + 3
+
+
+def test_cache_donation_recorded_in_lowering(setup):
+    """build_serve_tokens donates the cache argument: the lowering must
+    record input->output buffer aliasing for the cache leaves (on CPU,
+    XLA falls back to copies at runtime, but the donation contract is in
+    the lowered module — on TPU/GPU the caches update in place)."""
+    params, toks = setup
+    sys_ = _lm("vectorized")
+    fn = decode.build_serve_tokens(sys_, GEN, donate_caches=True)
+    caches = _prefilled(sys_, params, toks, sys_.mask_seeds())
+    lowered = fn.lower(params, toks[:, S - 1:], caches,
+                       jnp.asarray(POS0, jnp.int32), jax.random.PRNGKey(0))
+    txt = lowered.as_text()
+    n_aliased = txt.count("tf.aliasing_output")
+    assert n_aliased >= len(jax.tree.leaves(caches)), \
+        "cache buffers are not donated in the lowered module"
+
+
+def test_jitted_builder_matches_unjitted(setup):
+    """The production jitted+donating form returns exactly what the
+    traced function does (donation must not change results)."""
+    params, toks = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    tok0 = toks[:, S - 1:]
+    key = jax.random.PRNGKey(5)
+    c1 = _prefilled(sys_, params, toks, seeds)
+    want, c_want, pos_want, _ = sys_.serve_tokens(params, tok0, c1, POS0,
+                                                  GEN, seeds, key=key)
+    fn = decode.build_serve_tokens(sys_, GEN, donate_caches=True)
+    c2 = _prefilled(sys_, params, toks, seeds)
+    got, c_got, pos_got, _ = fn(params, tok0, c2,
+                                jnp.asarray(POS0, jnp.int32), key)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    np.testing.assert_array_equal(np.asarray(pos_want), np.asarray(pos_got))
+    _assert_trees_equal(c_want, c_got)

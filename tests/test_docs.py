@@ -1,0 +1,84 @@
+"""tools/check_links.py — the docs link checker the CI docs job runs.
+
+Unit tests of the checker logic (slugs, fences, anchors, missing
+files) plus the real check over the repo's narrative docs, so a broken
+relative link fails tier-1 locally before it ever reaches CI.
+"""
+import importlib.util
+import os
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "check_links", os.path.join(_ROOT, "tools", "check_links.py"))
+cl = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cl)
+
+DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/PROTOCOL.md",
+        "benchmarks/README.md"]
+
+
+def test_repo_docs_links_resolve():
+    """The exact invocation the CI docs job runs must pass."""
+    paths = [os.path.join(_ROOT, d) for d in DOCS]
+    for p in paths:
+        assert os.path.exists(p), f"narrative doc missing: {p}"
+    assert cl.main(paths) == 0
+
+
+def test_github_slugs():
+    assert cl.github_slug("Known gaps") == "known-gaps"
+    assert cl.github_slug("The `blind_uplink` wire format!") == \
+        "the-blind_uplink-wire-format"
+    assert cl.github_slug("A — dash & co.") == "a--dash--co"
+
+
+def test_broken_file_link_detected(tmp_path):
+    p = tmp_path / "doc.md"
+    p.write_text("see [here](missing.md) and [ok](doc.md)")
+    errors = cl.check_file(str(p))
+    assert len(errors) == 1 and "missing.md" in errors[0]
+
+
+def test_broken_anchor_detected(tmp_path):
+    p = tmp_path / "doc.md"
+    p.write_text("# Real Heading\n[ok](#real-heading) [bad](#no-such)\n")
+    errors = cl.check_file(str(p))
+    assert len(errors) == 1 and "no-such" in errors[0]
+
+
+def test_cross_file_anchor(tmp_path):
+    a, b = tmp_path / "a.md", tmp_path / "b.md"
+    b.write_text("## Target Section\n")
+    a.write_text("[good](b.md#target-section) [bad](b.md#nope)")
+    errors = cl.check_file(str(a))
+    assert len(errors) == 1 and "nope" in errors[0]
+
+
+def test_links_in_code_blocks_ignored(tmp_path):
+    p = tmp_path / "doc.md"
+    p.write_text("```\n[not a link](nowhere.md)\n```\n"
+                 "and `[inline](gone.md)` too\n")
+    assert cl.check_file(str(p)) == []
+
+
+def test_http_links_skipped_no_network(tmp_path):
+    p = tmp_path / "doc.md"
+    p.write_text("[ext](https://example.com/x) [mail](mailto:a@b.c)")
+    assert cl.check_file(str(p)) == []
+
+
+def test_duplicate_headings_get_suffixed_slugs(tmp_path):
+    p = tmp_path / "doc.md"
+    p.write_text("# Same\n# Same\n[one](#same) [two](#same-1)")
+    assert cl.check_file(str(p)) == []
+
+
+def test_main_exit_codes(tmp_path):
+    good = tmp_path / "good.md"
+    good.write_text("# ok\n")
+    bad = tmp_path / "bad.md"
+    bad.write_text("[x](gone.md)")
+    assert cl.main([str(good)]) == 0
+    assert cl.main([str(bad)]) == 1
+    assert cl.main([str(tmp_path / "absent.md")]) == 1
+    assert cl.main([]) == 2

@@ -18,17 +18,26 @@ cmp_mod = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(cmp_mod)
 
 
-def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16)):
+def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
+         decode_ms=5.0):
+    rows = [{"C": c, "engine": "vectorized", "batch": 32,
+             "use_kernel": False, "fused_masks": False,
+             "round_ms": round_ms, "mask_ms": mask_ms,
+             "bytes_per_round": bytes_pr} for c in cs]
+    if decode_ms is not None:
+        rows.append({"kind": "decode", "C": 4, "engine": "vectorized",
+                     "batch": 2, "gen": 16,
+                     "decode_ms_per_tok": decode_ms,
+                     "tokens_per_s": 2e3 / decode_ms})
     return {
         "schema": cmp_mod.SCHEMA,
         "calibration_ms": cal,
         "config": {"batch": 32, "rounds": 5, "d_embed": 64,
                    "n_features": 256, "mask_mode": "float",
-                   "mask_only": False},
-        "rows": [{"C": c, "engine": "vectorized", "batch": 32,
-                  "use_kernel": False, "fused_masks": False,
-                  "round_ms": round_ms, "mask_ms": mask_ms,
-                  "bytes_per_round": bytes_pr} for c in cs],
+                   "mask_only": False,
+                   "decode": {"gen": 16, "batch": 2, "prompt": 8,
+                              "arch": "qwen2.5-3b"}},
+        "rows": rows,
     }
 
 
@@ -36,8 +45,33 @@ def test_identical_docs_pass():
     base = _doc()
     table, failures = cmp_mod.compare(base, copy.deepcopy(base), 1.5)
     assert not failures
-    assert len(table) == 2 * 3          # 2 rows x (round, mask, bytes)
+    # 2 train rows x (round, mask, bytes) + decode row x (ms/tok)
+    assert len(table) == 2 * 3 + 1
     assert all(r["ok"] for r in table)
+
+
+def test_decode_row_regression_fails():
+    """The fused scan-decode throughput row is gated like any other
+    timing: >threshold ms/tok slowdown fails, <threshold passes."""
+    _, failures = cmp_mod.compare(_doc(decode_ms=5.0), _doc(decode_ms=9.0),
+                                  1.5)
+    assert any("decode_ms_per_tok" in f for f in failures)
+    _, failures = cmp_mod.compare(_doc(decode_ms=5.0), _doc(decode_ms=7.0),
+                                  1.5)
+    assert not failures
+
+
+def test_decode_row_missing_is_lost_coverage():
+    _, failures = cmp_mod.compare(_doc(), _doc(decode_ms=None), 1.5)
+    assert any("decode" in f and "missing" in f for f in failures)
+
+
+def test_decode_and_train_rows_key_separately():
+    """A kind="decode" row at C=4 must not collide with the C=4 training
+    row (row_key includes the kind discriminator)."""
+    doc = _doc()
+    keys = [cmp_mod.row_key(r) for r in doc["rows"]]
+    assert len(set(keys)) == len(keys)
 
 
 def test_regression_over_threshold_fails():
@@ -138,10 +172,16 @@ def test_committed_baseline_is_valid():
     path = os.path.join(_ROOT, "benchmarks", "BENCH_many_party.json")
     doc = cmp_mod.load(path)
     assert doc["calibration_ms"] > 0
-    assert {r["C"] for r in doc["rows"]} == {4, 16, 64}
-    for r in doc["rows"]:
+    train = [r for r in doc["rows"] if r.get("kind", "train") == "train"]
+    dec = [r for r in doc["rows"] if r.get("kind") == "decode"]
+    assert {r["C"] for r in train} == {4, 16, 64}
+    for r in train:
         for m in ("round_ms", "mask_ms", "bytes_per_round"):
             assert m in r, (r.get("C"), m)
+    # v2: the fused scan-decode throughput row must be present + gated
+    assert dec, "baseline lost the decode tokens/sec row"
+    for r in dec:
+        assert r["decode_ms_per_tok"] > 0 and r["cal_ms"] > 0
     # and the gate passes against itself
     table, failures = cmp_mod.compare(doc, copy.deepcopy(doc), 1.5)
     assert not failures and table

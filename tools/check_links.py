@@ -1,0 +1,107 @@
+"""Relative-link checker for the narrative docs. No network, stdlib only.
+
+Validates every markdown link in the given files:
+  * relative file targets must exist on disk (resolved against the
+    linking file's directory);
+  * ``#anchor`` fragments — same-page or on a linked markdown file —
+    must match a heading in that file (GitHub slugification);
+  * ``http(s)://`` / ``mailto:`` targets are skipped (no network by
+    design: CI must not flake on the internet).
+
+Fenced code blocks are stripped first so example snippets aren't
+checked. Exit 1 with one line per broken link.
+
+Usage:
+    python tools/check_links.py README.md docs/*.md benchmarks/README.md
+
+Run by the ``docs`` CI job (.github/workflows/ci.yml) and by
+tests/test_docs.py (which also checks the repo docs directly, so a
+broken link fails tier-1 before it ever reaches CI).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List
+
+# [text](target) — target up to the first unescaped ')' or whitespace;
+# images (![alt](src)) match too, which is what we want
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^(```|~~~).*?^\1\s*$", re.M | re.S)
+INLINE_CODE_RE = re.compile(r"`[^`\n]*`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces -> hyphens, punctuation
+    dropped (hyphens/underscores kept), markdown emphasis stripped."""
+    h = re.sub(r"[*`]", "", heading.strip()).lower()
+    h = h.replace(" ", "-")
+    return re.sub(r"[^\w\-]", "", h)
+
+
+def _strip_code(text: str) -> str:
+    return INLINE_CODE_RE.sub("", FENCE_RE.sub("", text))
+
+
+def heading_slugs(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = FENCE_RE.sub("", f.read())
+    slugs = set()
+    counts: dict = {}
+    for m in HEADING_RE.finditer(text):
+        s = github_slug(m.group(1))
+        n = counts.get(s, 0)
+        counts[s] = n + 1
+        slugs.add(s if n == 0 else f"{s}-{n}")   # duplicate-heading suffix
+    return slugs
+
+
+def check_file(path: str) -> List[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = _strip_code(f.read())
+    base = os.path.dirname(os.path.abspath(path))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        fname, _, frag = target.partition("#")
+        resolved = (os.path.abspath(path) if not fname
+                    else os.path.normpath(os.path.join(base, fname)))
+        if not os.path.exists(resolved):
+            errors.append(f"{path}: broken link -> {target} "
+                          f"(no such file: {resolved})")
+            continue
+        if frag:
+            if not resolved.endswith((".md", ".markdown")):
+                continue                     # can't anchor-check non-md
+            if frag not in heading_slugs(resolved):
+                errors.append(f"{path}: broken anchor -> {target} "
+                              f"(no heading slug '#{frag}')")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for path in argv:
+        if not os.path.exists(path):
+            errors.append(f"{path}: file not found")
+            continue
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(argv)} file(s): all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
