@@ -5,8 +5,9 @@ Compares a freshly-swept ``BENCH_many_party.json`` (schema
 ``many_party_scaling.py --gate --save ...``) against the committed CPU
 baseline ``benchmarks/BENCH_many_party.json`` and FAILS (exit 1) when any
 gated timing regresses by more than ``--threshold`` (default 1.5x) —
-training round time, mask-synthesis time, and the fused scan-decode
-``decode_ms_per_tok`` (the serve-path tokens/sec row) — when the
+protocol round time, mask-synthesis time, the fused scan-decode
+``decode_ms_per_tok`` (the serve-path tokens/sec row) and the fused
+scan-train ``train_ms_per_step`` (the train-path row) — when the
 deterministic wire-bytes accounting grows, or when a baseline row
 vanished from the sweep (lost coverage is a regression too).
 
@@ -33,9 +34,11 @@ from typing import Dict, List, Tuple
 SCHEMA = "easter/many-party-bench/v2"
 # wall-clock metrics gated at --threshold (calibration-normalized);
 # rows carry only the metrics that apply to them (a kind="decode" row
-# has decode_ms_per_tok, a training row round_ms/mask_ms) — absent
-# baseline metrics are skipped per row
-GATED_MS = ("round_ms", "mask_ms", "decode_ms_per_tok")
+# has decode_ms_per_tok, a kind="train" row train_ms_per_step, a kindless
+# per-C protocol-round row round_ms/mask_ms) — absent baseline metrics
+# are skipped per row
+GATED_MS = ("round_ms", "mask_ms", "decode_ms_per_tok",
+            "train_ms_per_step")
 # bytes_per_round is deterministic integer accounting with zero noise:
 # ANY growth is a wire-format regression, so the gate is exact equality
 BYTES_TOL = 1.0
@@ -53,7 +56,9 @@ def load(path: str) -> dict:
 
 
 def row_key(r: dict) -> Tuple:
-    return (r.get("kind", "train"), r["C"], r["engine"],
+    # kindless rows are the per-C protocol-round sweep; kind="train" /
+    # kind="decode" are the LLM-scale fused-engine rows
+    return (r.get("kind", ""), r["C"], r["engine"],
             r.get("use_kernel", False), r.get("fused_masks", False))
 
 

@@ -30,7 +30,11 @@ sweeping mask synthesis to C=128 on both engines cheaply.
 bytes/round, a fused scan-decode throughput row (``kind="decode"``:
 ``decode_ms_per_tok`` / ``tokens_per_s`` of ``EasterLM.serve_tokens``,
 core/decode.py, at LLM smoke scale — the serve-path metric the decode
-tentpole optimizes), plus a host-speed calibration scalar so the CI gate
+tentpole optimizes), a fused scan-train throughput row (``kind="train"``:
+``train_ms_per_step`` / ``train_tokens_per_s`` of
+``train_loop.build_train_chunk``, core/train_loop.py, same smoke scale,
+with the pre-scan step-loop driver as the informational A/B column),
+plus a host-speed calibration scalar so the CI gate
 (``benchmarks/compare.py``, committed baseline
 ``benchmarks/BENCH_many_party.json``) can normalize across runner speeds.
 ``--gate`` is the exact preset the CI perf-gate job sweeps.
@@ -147,6 +151,8 @@ SCHEMA = "easter/many-party-bench/v2"
 # the decode row's fixed shape: LLM smoke scale, C=4 (the paper's party
 # count). MUST stay in sync with the committed baseline's config block.
 DECODE_BATCH, DECODE_PROMPT, DECODE_ARCH = 2, 8, "qwen2.5-3b"
+# the kind="train" row's fixed shape (same LLM smoke system)
+TRAIN_BATCH, TRAIN_SEQ = 2, 8
 
 
 def time_decode(gen: int, engine: str = "vectorized", reps: int = 3) -> dict:
@@ -197,19 +203,94 @@ def time_decode(gen: int, engine: str = "vectorized", reps: int = 3) -> dict:
            "tokens_per_s": DECODE_BATCH * gen / best,
            "compile_s": compile_s,
            "cal_ms": calibration_ms(20)}
-    if engine == "sharded":
-        # record what actually ran (cf. the train rows): K=3 passives on
-        # a non-dividing or 1-device axis degrade to plain vmap — don't
-        # pass vectorized numbers off as a sharded measurement
-        from repro import sharding as shard_rules
-        ok = lm._shard_ok()
-        row["party_devices"] = (shard_rules.party_axis_size(lm.party_mesh)
-                                if ok else 1)
-        if not ok:
-            print("many_party decode engine=sharded WARNING: passive "
-                  "group does not divide the party axis — row measures "
-                  "the vectorized fallback")
+    _annotate_sharded_lm(row, lm, "decode")
     return row
+
+
+def time_train(chunk: int, engine: str = "vectorized", reps: int = 3
+               ) -> dict:
+    """Fused scan-train throughput: ``core/train_loop.build_train_chunk``
+    (ONE compiled ``lax.scan`` over ``chunk`` EASTER optimizer steps —
+    blinded round + grads + update per step) at LLM smoke scale, vs the
+    step-at-a-time jitted loop it replaced.
+
+    ``train_ms_per_step`` (min-of-reps steady state of the fused chunk)
+    is the gated metric; ``train_tokens_per_s`` is the dashboard-friendly
+    inverse (batch x seq scaled). ``step_loop_ms_per_step`` is the
+    informational pre-scan driver column (one jit dispatch per optimizer
+    step — the dispatch-overhead A/B). The timing loop replays one
+    training state, so the builder runs with ``donate=False`` (donation
+    would consume params/opt state on the first call; the dispatch
+    count — one per chunk — is identical either way)."""
+    from repro.configs.base import get_config, smoke_variant
+    from repro.core import train_loop
+    from repro.core.easter_lm import EasterLM
+    from repro.optim import make_optimizer
+
+    cfg = smoke_variant(get_config(DECODE_ARCH))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1)
+    lm = EasterLM(cfg=cfg, easter=e, engine=engine)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    opt = make_optimizer("adam", 1e-3)
+    opt_state = opt.init(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (chunk, TRAIN_BATCH, TRAIN_SEQ + 1), 0,
+                              cfg.vocab_size)
+    batches = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    step0 = jnp.asarray(0, jnp.int32)
+    fn = train_loop.build_train_chunk(lm, opt, donate=False)
+    t0 = time.perf_counter()
+    out = fn(params, opt_state, batches, step0)
+    jax.block_until_ready(out[3]["loss"])
+    compile_s = time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(params, opt_state, batches, step0)
+        jax.block_until_ready(out[3]["loss"])
+        best = min(best, time.perf_counter() - t0)
+    # the pre-scan driver: one jitted train-step dispatch per step, state
+    # rebound between dispatches exactly like launch/train.py --chunk 1
+    # (the data dependency matters — independent dispatches would overlap
+    # under async dispatch and under-measure the driver)
+    step_fn = jax.jit(train_loop.make_train_step(lm, opt))
+    bs = [jax.tree.map(lambda x, i=i: x[i], batches) for i in range(chunk)]
+    o = step_fn(params, opt_state, bs[0], step0)
+    jax.block_until_ready(o[2]["loss"])
+    best_sl = float("inf")
+    for _ in range(reps):
+        p, s = params, opt_state
+        t0 = time.perf_counter()
+        for i in range(chunk):
+            p, s, m = step_fn(p, s, bs[i], jnp.asarray(i, jnp.int32))
+        jax.block_until_ready(m["loss"])
+        best_sl = min(best_sl, time.perf_counter() - t0)
+    row = {"kind": "train", "C": 4, "engine": engine,
+           "batch": TRAIN_BATCH, "seq": TRAIN_SEQ, "chunk": chunk,
+           "train_ms_per_step": best * 1e3 / chunk,
+           "train_tokens_per_s": TRAIN_BATCH * TRAIN_SEQ * chunk / best,
+           "step_loop_ms_per_step": best_sl * 1e3 / chunk,
+           "compile_s": compile_s,
+           "cal_ms": calibration_ms(20)}
+    _annotate_sharded_lm(row, lm, "train")
+    return row
+
+
+def _annotate_sharded_lm(row: dict, lm, kind: str) -> None:
+    """For LLM-scale rows swept with engine="sharded": record what
+    actually ran (cf. the paper-scale sweep rows) — K=3 passives on a
+    non-dividing or 1-device axis degrade to plain vmap; don't pass
+    vectorized numbers off as a sharded measurement."""
+    if row["engine"] != "sharded":
+        return
+    from repro import sharding as shard_rules
+    ok = lm._shard_ok()
+    row["party_devices"] = (shard_rules.party_axis_size(lm.party_mesh)
+                            if ok else 1)
+    if not ok:
+        print(f"many_party {kind} engine=sharded WARNING: passive group "
+              f"does not divide the party axis — row measures the "
+              f"vectorized fallback")
 
 
 def calibration_ms(reps: int = 50) -> float:
@@ -236,7 +317,8 @@ def calibration_ms(reps: int = 50) -> float:
 
 
 _MIN_MERGE = ("setup_s", "mask_first_ms", "mask_ms", "round_ms",
-              "compile_s", "cal_ms", "decode_ms_per_tok")
+              "compile_s", "cal_ms", "decode_ms_per_tok",
+              "train_ms_per_step", "step_loop_ms_per_step")
 
 
 def _merge_min(prev: dict, new: dict) -> dict:
@@ -252,14 +334,34 @@ def _merge_min(prev: dict, new: dict) -> dict:
         out["rounds_per_s"] = 1e3 / out["round_ms"]
     if "decode_ms_per_tok" in out and out["decode_ms_per_tok"] > 0:
         out["tokens_per_s"] = out["batch"] * 1e3 / out["decode_ms_per_tok"]
+    if "train_ms_per_step" in out and out["train_ms_per_step"] > 0:
+        out["train_tokens_per_s"] = (out["batch"] * out["seq"] * 1e3
+                                     / out["train_ms_per_step"])
     return out
 
 
 def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
         mask_mode, loop_max_c, fused_masks=False, mask_only=False,
-        save=None, repeat=1, decode_gen=0):
+        save=None, repeat=1, decode_gen=0, train_chunk=0):
     merged = {}
     for rep in range(repeat):
+        if train_chunk and not mask_only:
+            # fused scan-train throughput (see time_train). Swept once
+            # per pass like every other cell so the min-merge defeats
+            # host speed-regime drift; engine pinned like the decode row.
+            tr_eng = engines[0] if len(set(engines)) == 1 else "vectorized"
+            r = time_train(train_chunk, engine=tr_eng)
+            k_tr = ("train", r["engine"])
+            merged[k_tr] = (r if k_tr not in merged
+                            else _merge_min(merged[k_tr], r))
+            rm = merged[k_tr]
+            print(f"many_party train  engine={r['engine']:10s} "
+                  f"chunk {train_chunk:2d} x{r['batch']}x{r['seq']}  "
+                  f"{rm['train_ms_per_step']:8.2f} ms/step fused  "
+                  f"({rm['step_loop_ms_per_step']:8.2f} step-loop, "
+                  f"{rm['train_tokens_per_s']:6.1f} tok/s)  "
+                  f"compile {r['compile_s']:6.1f} s"
+                  + (f"  [pass {rep + 1}/{repeat}]" if repeat > 1 else ""))
         if decode_gen and not mask_only:
             # fused scan-decode throughput (serve path; see time_decode).
             # Swept once per pass like every other cell so the min-merge
@@ -344,7 +446,10 @@ def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
                        "mask_only": mask_only,
                        "decode": {"gen": decode_gen, "batch": DECODE_BATCH,
                                   "prompt": DECODE_PROMPT,
-                                  "arch": DECODE_ARCH}},
+                                  "arch": DECODE_ARCH},
+                       "train": {"chunk": train_chunk,
+                                 "batch": TRAIN_BATCH, "seq": TRAIN_SEQ,
+                                 "arch": DECODE_ARCH}},
             "rows": rows,
         }
         os.makedirs(os.path.dirname(save) or ".", exist_ok=True)
@@ -385,6 +490,9 @@ def main():
     ap.add_argument("--decode-gen", type=int, default=16,
                     help="tokens per fused scan-decode throughput row "
                          "(0 = skip the decode row)")
+    ap.add_argument("--train-chunk", type=int, default=4,
+                    help="optimizer steps per fused scan-train "
+                         "throughput row (kind=\"train\"; 0 = skip)")
     ap.add_argument("--repeat", type=int, default=1,
                     help="sweep every cell this many times (min-merged) — "
                          "defeats minute-scale host speed-regime drift")
@@ -396,12 +504,14 @@ def main():
         cs, engines = [4, 16, 64], ["vectorized"]
         a.batch, a.rounds, a.n_features, a.d_embed = 32, 5, 256, 64
         a.decode_gen = 16
+        a.train_chunk = 4
         a.repeat = max(a.repeat, 2)
         save = a.save
     elif a.smoke:
         cs, engines = [64], ["vectorized"]
         a.batch, a.rounds, a.n_features = 32, 5, 256
         a.decode_gen = 0
+        a.train_chunk = 0
         save = None
     else:
         cs = [int(c) for c in a.cs.split(",")]
@@ -411,7 +521,8 @@ def main():
     run(cs, engines, a.batch, a.rounds, a.d_embed, a.n_features,
         a.use_kernel, a.mask_mode, a.loop_max_c,
         fused_masks=a.fused_masks, mask_only=a.mask_only, save=save,
-        repeat=a.repeat, decode_gen=a.decode_gen)
+        repeat=a.repeat, decode_gen=a.decode_gen,
+        train_chunk=a.train_chunk)
 
 
 if __name__ == "__main__":

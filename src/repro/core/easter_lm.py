@@ -399,6 +399,23 @@ class EasterLM:
         total = jnp.sum(per) + aux_a + jnp.sum(aux_p)
         return total, per
 
+    def train_chunk(self, params, opt_state, batches, step0, opt):
+        """Fused multi-step training: N optimizer steps in ONE
+        ``lax.scan`` — the training twin of ``serve_tokens`` (one trace,
+        one compile, params + optimizer state device-resident as scan
+        carry; see ``core/train_loop.py`` and
+        ``train_loop.build_train_chunk`` for the jitted, state-donating
+        form). The scan body is the ordinary train step built on
+        ``loss_fn``, so engines, mask modes and the TRAIN-domain
+        per-step round schedule (``step0 + i``) are inherited verbatim
+        and proven bit-exact against the step-at-a-time jitted loop.
+        ``opt`` is any Optimizer-shaped object, including the paper's
+        §IV-E heterogeneous ``optim.make_party_optimizers``."""
+        from repro.core import train_loop
+        return train_loop.train_chunk(
+            train_loop.make_train_step(self, opt),
+            params, opt_state, batches, step0)
+
     # -- serving -------------------------------------------------------------
     def init_caches(self, batch: int, cache_len: int,
                     window_override: int = -1):

@@ -299,21 +299,42 @@ class EasterClassifier:
         return grads, L_all
 
     # -- training ----------------------------------------------------------
-    def make_train_step(self, optimizer_name: str, lr: float, **opt_kw):
-        opt = make_optimizer(optimizer_name, lr, **opt_kw)
+    def make_train_step(self, optimizer_name: str, lr: float, *,
+                        party_optimizers=None, **opt_kw):
+        """(init_opt, jitted step) for one protocol round + update.
+
+        ``party_optimizers`` (paper §IV-E heterogeneous optimization):
+        ``{party: (name, lr, hparams)}`` — parties not listed fall back
+        to ``(optimizer_name, lr, opt_kw)``. Every party always updates
+        with its OWN optimizer on its OWN loss gradient; the grouped
+        engines stack states per (execution-group, optimizer) subgroup
+        and vmap the update (``PartyEngine.update_groups``), so a
+        homogeneous C=128 run pays O(#groups) update ops and a
+        heterogeneous one O(#groups x #distinct optimizers) — the model
+        stays vectorized either way. The loop engine keeps the
+        per-party update loop as the oracle.
+        """
+        from repro.optim import resolve_party_optimizers
+        default = (optimizer_name, lr, opt_kw)
+        opts = resolve_party_optimizers(party_optimizers or {}, self.C,
+                                        default=default)
 
         def init_opt(params):
-            return [opt.init(p) for p in params]
+            return [opts[k].init(p) for k, p in enumerate(params)]
 
         @jax.jit
         def step(params, opt_state, xs, y, masks):
             (total, per), grads = jax.value_and_grad(
                 self.loss_fn, has_aux=True)(params, xs, y, masks)
-            new_params, new_state = [], []
-            for k in range(self.C):
-                p, s = opt.update(grads[k], opt_state[k], params[k])
-                new_params.append(p)
-                new_state.append(s)
+            if self.engine in ("vectorized", "sharded"):
+                new_params, new_state = self._eng.update_groups(
+                    opts, grads, opt_state, params)
+            else:
+                new_params, new_state = [], []
+                for k in range(self.C):
+                    p, s = opts[k].update(grads[k], opt_state[k], params[k])
+                    new_params.append(p)
+                    new_state.append(s)
             return new_params, new_state, total, per
 
         return init_opt, step

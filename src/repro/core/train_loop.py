@@ -1,0 +1,149 @@
+"""Fused scan training: N EASTER optimizer steps in ONE ``lax.scan``.
+
+The training twin of ``core/decode.py``. The step-at-a-time driver (one
+jitted train step per round, dispatched from a host Python loop) pays a
+host round-trip per optimizer step: every party's params AND optimizer
+state exit the jit boundary, bounce through Python, and re-enter on the
+next dispatch. ``train_chunk`` fuses N rounds into a single compiled
+program — one trace, one compile, one dispatch per chunk — with
+``(params, opt_state, step_idx)`` threaded as scan carry and the stacked
+batches as scan ``xs``. ``build_train_chunk`` additionally donates the
+params and optimizer-state buffers (``jax.jit(..., donate_argnums=...)``)
+so the model trains in place on device.
+
+The scan body IS the ordinary train step (``make_train_step``, the same
+definition ``launch/steps.build_train_step`` hands the launcher) — not a
+reimplementation — so every execution engine rides along unchanged:
+
+  * ``loop``        — the per-party oracle, unrolled inside the body;
+  * ``vectorized``  — the stacked-passive group under one ``jax.vmap``;
+  * ``sharded``     — in-shard blinding under ``shard_map``, the tiled
+    all-gather of the BLINDED uplink the only party-axis collective,
+    once per optimizer step;
+
+and so is the optimizer: any ``Optimizer``-shaped object threads through,
+including ``optim.make_party_optimizers`` — the paper's §IV-E
+heterogeneous per-party optimization (SGD / momentum / Adagrad / Adam
+per participant) runs inside the fused scan.
+
+The carried ``step_idx`` doubles as the TRAIN-domain PRF round counter:
+step i of a chunk started at ``step0`` blinds under round ``step0 + i``
+(``train_round_schedule``) — raw step indices ARE the TRAIN domain
+(kept below 2**30; SERVE/PREFILL rounds live above it, see
+``core/blinding.py``), exactly the schedule the step-at-a-time loop
+passes. tests/test_train_chunk.py pins bit-exactness of params,
+optimizer states and per-step metrics against the jitted step loop for
+all three engines, float and int32 wire formats, fresh_masks on and off,
+plus the in-scan mask-schedule audit and the donation/lowering audit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def train_round_schedule(step0, n_steps: int) -> jnp.ndarray:
+    """PRF round indices a fused train chunk visits: ``step0 + i``.
+
+    This is the contract between the scan carry and the mask engine —
+    step i of a chunk started at global step ``step0`` blinds under
+    exactly the round the step-at-a-time loop would have passed as its
+    ``step_idx``. Training rounds are the TRAIN PRF domain: raw indices
+    below ``blinding.SERVE_DOMAIN`` (= 1<<30), so an in-chunk pad can
+    never coincide with a decode- or prefill-round pad of the same
+    shape. Audited against the masks actually synthesized inside the
+    compiled scan in tests/test_train_chunk.py. (With
+    ``fresh_masks=False`` the schedule is irrelevant by design: every
+    round collapses to the paper's single static pad.)
+    """
+    return (jnp.asarray(step0, jnp.int32)
+            + jnp.arange(n_steps, dtype=jnp.int32))
+
+
+def make_train_step(sys, opt):
+    """One EASTER training step for ``EasterLM``: loss -> grads -> update.
+
+    ``opt`` is any ``Optimizer``-shaped object (``optim.make_optimizer``
+    or the partitioned ``optim.make_party_optimizers``). The ONE DH
+    ceremony is resolved here (``sys.mask_seeds()`` is memoized down to
+    the blinding-level cache, shared with the serve/prefill builders).
+    This is the single train-step definition in the repo: the launcher's
+    per-step driver (``launch/steps.build_train_step``) and the fused
+    scan body below both use it, which is what makes their bit-exact
+    equivalence a structural property rather than a maintenance promise.
+    """
+    seeds = sys.mask_seeds()
+
+    def train_step(params, opt_state, batch, step_idx):
+        (total, per), grads = jax.value_and_grad(
+            sys.loss_fn, has_aux=True)(params, batch, step_idx, seeds)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": total, "per_party": per}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def stack_batches(batches):
+    """Stack a list of per-step batch pytrees into scan ``xs``: leading
+    axis = chunk length. Host numpy arrays are promoted to device arrays
+    once, here — inside the chunk they are sliced by the scan, never
+    re-transferred."""
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches)
+
+
+def train_chunk(step_fn, params, opt_state, batches, step0):
+    """Run N optimizer steps in one ``lax.scan`` (one trace/compile).
+
+    Args:
+      step_fn: ``(params, opt_state, batch, step_idx) -> (params,
+        opt_state, metrics)`` — the scan body; normally
+        ``make_train_step(sys, opt)``.
+      params / opt_state: the training state; threaded as scan carry so
+        it stays device-resident across all N steps.
+      batches: stacked batch pytree with leading axis N
+        (``stack_batches``) — the scan ``xs``; N is read from it, so one
+        jitted wrapper serves every chunk length (a shorter tail chunk
+        just triggers one more compile).
+      step0: scalar int32 global step of the chunk's first batch; also
+        the base of the TRAIN-domain PRF round schedule
+        (``train_round_schedule``) and the Adam-style step counters via
+        each optimizer's own state.
+
+    Returns ``(params, opt_state, step, metrics)`` with ``step`` advanced
+    to ``step0 + N`` (ready for a further ``train_chunk`` call — chunked
+    training composes) and ``metrics`` the per-step stacked pytree
+    (``{"loss": (N,), "per_party": (N, C)}``).
+    """
+    step0 = jnp.asarray(step0, jnp.int32)
+
+    def body(carry, batch):
+        p, s, i = carry
+        p, s, metrics = step_fn(p, s, batch, i)
+        return (p, s, i + 1), metrics
+
+    (params, opt_state, step), metrics = jax.lax.scan(
+        body, (params, opt_state, step0), batches)
+    return params, opt_state, step, metrics
+
+
+def build_train_chunk(sys, opt, *, donate: bool = True):
+    """Jitted fused-train step: ``fn(params, opt_state, batches, step0)``.
+
+    The params and optimizer-state arguments are donated so XLA aliases
+    their input buffers to the outputs: the chunk trains the model in
+    place on device instead of round-tripping fresh copies per call.
+    Donated buffers are CONSUMED — the caller must rebind both to the
+    returned pytrees and never touch the donated arrays again (pass
+    ``donate=False`` for benchmark/test loops that replay one training
+    state). On backends without donation support (CPU) XLA silently
+    falls back to copying; the aliasing is still recorded in the
+    lowering (pinned by tests/test_train_chunk.py).
+    """
+    step_fn = make_train_step(sys, opt)
+
+    def run(params, opt_state, batches, step0):
+        return train_chunk(step_fn, params, opt_state, batches, step0)
+
+    return jax.jit(run, donate_argnums=(0, 1) if donate else ())

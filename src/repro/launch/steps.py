@@ -17,6 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import sharding as shard_rules
 from repro.configs.base import (EasterConfig, InputShape, INPUT_SHAPES,
                                 ModelConfig)
+from repro.core import train_loop
 from repro.core.easter_lm import EasterLM
 from repro.optim import make_optimizer
 
@@ -94,9 +95,10 @@ def _abstract_params(sys: EasterLM):
     return jax.eval_shape(lambda: sys.init_params(jax.random.PRNGKey(0)))
 
 
-def abstract_state(sys: EasterLM, optimizer: str):
+def abstract_state(sys: EasterLM, optimizer):
     params = _abstract_params(sys)
-    opt = make_optimizer(optimizer, 1e-3)
+    opt = (optimizer if callable(getattr(optimizer, "init", None))
+           else make_optimizer(optimizer, 1e-3))
     opt_state = jax.eval_shape(opt.init, params)
     return params, opt_state
 
@@ -106,19 +108,24 @@ def abstract_state(sys: EasterLM, optimizer: str):
 # ---------------------------------------------------------------------------
 
 
-def build_train_step(sys: EasterLM, optimizer: str, lr: float = 1e-4,
+def build_train_step(sys: EasterLM, optimizer, lr: float = 1e-4,
                      grad_clip: float = 1.0):
-    opt = make_optimizer(optimizer, lr, grad_clip=grad_clip)
-    seeds = sys.mask_seeds()
+    """(train_step, opt) for one optimizer step.
 
-    def train_step(params, opt_state, batch, step_idx):
-        (total, per), grads = jax.value_and_grad(
-            sys.loss_fn, has_aux=True)(params, batch, step_idx, seeds)
-        new_params, new_state = opt.update(grads, opt_state, params)
-        metrics = {"loss": total, "per_party": per}
-        return new_params, new_state, metrics
-
-    return train_step, opt
+    ``optimizer``: a name (homogeneous — ONE optimizer over every
+    party's subtree, global-norm clipped jointly) or a prebuilt
+    ``Optimizer`` / ``optim.make_party_optimizers`` partitioned
+    optimizer (heterogeneous per-party optimization, paper §IV-E —
+    clipping is then per party; ``lr``/``grad_clip`` are ignored, they
+    live in the per-party specs). The step definition itself lives in
+    ``core/train_loop.make_train_step`` — the SAME function the fused
+    scan chunk (``train_loop.build_train_chunk``) runs as its body, so
+    driving N of these from a host loop and scanning N of them are
+    bit-exact by construction.
+    """
+    opt = (optimizer if callable(getattr(optimizer, "update", None))
+           else make_optimizer(optimizer, lr, grad_clip=grad_clip))
+    return train_loop.make_train_step(sys, opt), opt
 
 
 def build_serve_step(sys: EasterLM, shape: InputShape):

@@ -5,6 +5,19 @@ CPU example (reduced config):
         --steps 50 --batch 4 --seq 64
 Production mesh usage mirrors the dry-run (see launch/dryrun.py); on real
 TPU hardware drop --smoke and pass --mesh data,model.
+
+Training runs through the fused scan-train engine (core/train_loop.py):
+every ``--chunk`` optimizer steps are ONE compiled program — params +
+optimizer state threaded as scan carry (and donated, so the model trains
+in place on device), the carried step index doubling as the TRAIN-domain
+PRF round counter. ``--chunk 1`` keeps the pre-scan driver (one jitted
+train-step dispatch per round) for A/B timing and as the bit-exactness
+oracle the fused path is tested against (tests/test_train_chunk.py).
+
+Heterogeneous per-party optimization (paper §IV-E) comes from
+``--party-optimizers``, e.g. ``0=sgd:0.01,1=adagrad:0.005`` — unlisted
+parties fall back to ``--optimizer``/``--lr``; the per-party states ride
+the same checkpoint as the params.
 """
 from __future__ import annotations
 
@@ -17,8 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint
+from repro import checkpoint, optim
 from repro.configs.base import EasterConfig, get_config, smoke_variant
+from repro.core import train_loop
 from repro.core.easter_lm import EasterLM
 from repro.data.synthetic import lm_batch_iterator
 from repro.launch import steps as steps_mod
@@ -34,6 +48,15 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--party-optimizers", default=None,
+                    help="heterogeneous per-party optimizers (paper "
+                         "§IV-E), e.g. '0=sgd:0.01,1=adagrad:0.005' "
+                         "(k=name:lr[:hparam=v...]); unlisted parties "
+                         "fall back to --optimizer/--lr")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="fused scan training: optimizer steps per "
+                         "compiled dispatch (core/train_loop.py); 1 = "
+                         "step-at-a-time driver (the A/B oracle)")
     ap.add_argument("--num-passive", type=int, default=3)
     ap.add_argument("--d-embed", type=int, default=128)
     ap.add_argument("--mask-mode", default="float",
@@ -51,7 +74,9 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true",
                     help="restore params/opt state from --ckpt if present")
-    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="checkpoint cadence in steps (with --chunk > 1, "
+                         "saves on the first chunk boundary past it)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -77,8 +102,19 @@ def main():
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"total params (all parties): {n:,}")
 
-    train_step, opt = steps_mod.build_train_step(sys_, args.optimizer,
-                                                 lr=args.lr)
+    if args.party_optimizers:
+        spec = optim.parse_party_spec(args.party_optimizers)
+        for _, _, hp in spec.values():
+            # listed parties clip like unlisted ones unless overridden
+            # (k=...:grad_clip=0 disables) — no silent asymmetry
+            hp.setdefault("grad_clip", 1.0)
+        opt_arg = optim.make_party_optimizers(
+            spec, sys_.C,
+            default=(args.optimizer, args.lr, {"grad_clip": 1.0}))
+        print(f"party optimizers: {opt_arg.name}")
+    else:
+        opt_arg = args.optimizer
+    train_step, opt = steps_mod.build_train_step(sys_, opt_arg, lr=args.lr)
     opt_state = opt.init(params)
     start_step = 0
     if args.resume and args.ckpt and os.path.exists(args.ckpt):
@@ -88,31 +124,61 @@ def main():
         params, opt_state = state["params"], state["opt"]
         start_step = step0 or 0
         print(f"resumed from {args.ckpt} at step {start_step}")
-    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
 
     it = lm_batch_iterator(cfg.vocab_size, args.batch, args.seq,
                            seed=args.seed)
     t0 = time.perf_counter()
     history = []
-    for i in range(start_step, start_step + args.steps):
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                             jnp.asarray(i, jnp.int32))
-        if i % args.log_every == 0 or i == args.steps - 1:
-            loss = float(metrics["loss"])
-            per = np.round(np.asarray(metrics["per_party"]), 4)
-            dt = time.perf_counter() - t0
-            tok_s = (i + 1) * args.batch * args.seq / dt
-            print(f"step {i:5d} loss {loss:9.4f} per-party {per} "
-                  f"({tok_s:,.0f} tok/s)")
-            history.append({"step": i, "loss": loss,
-                            "per_party": per.tolist()})
-        if args.ckpt and (i + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt, {"params": params,
-                                        "opt": opt_state}, step=i + 1)
+    end = start_step + args.steps
+    chunk = max(1, args.chunk)
+
+    def log_steps(i0, losses, pers):
+        # tok/s over steps completed SINCE (RE)START: the absolute step
+        # index used to inflate throughput after --resume (t0 restarts,
+        # the index doesn't)
+        dt = time.perf_counter() - t0
+        tok_s = (i0 + len(losses) - start_step) * args.batch * args.seq / dt
+        for j in range(len(losses)):
+            i = i0 + j
+            if i % args.log_every == 0 or i == end - 1:
+                loss = float(losses[j])
+                per = np.round(np.asarray(pers[j]), 4)
+                print(f"step {i:5d} loss {loss:9.4f} per-party {per} "
+                      f"({tok_s:,.0f} tok/s)")
+                history.append({"step": i, "loss": loss,
+                                "per_party": per.tolist()})
+
+    if chunk > 1:
+        # production path: N steps per dispatch, params/opt state donated
+        # (consumed per call — rebound to the returned trees below)
+        chunk_fn = train_loop.build_train_chunk(sys_, opt)
+        i = start_step
+        while i < end:
+            n_steps = min(chunk, end - i)
+            batches = train_loop.stack_batches(
+                [next(it) for _ in range(n_steps)])
+            params, opt_state, _, metrics = chunk_fn(
+                params, opt_state, batches, jnp.asarray(i, jnp.int32))
+            log_steps(i, np.asarray(metrics["loss"]),
+                      np.asarray(metrics["per_party"]))
+            i += n_steps
+            if args.ckpt and (i // args.ckpt_every
+                              != (i - n_steps) // args.ckpt_every):
+                checkpoint.save(args.ckpt, {"params": params,
+                                            "opt": opt_state}, step=i)
+    else:
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+        for i in range(start_step, end):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 jnp.asarray(i, jnp.int32))
+            log_steps(i, [metrics["loss"]], [metrics["per_party"]])
+            if args.ckpt and (i + 1) % args.ckpt_every == 0:
+                checkpoint.save(args.ckpt, {"params": params,
+                                            "opt": opt_state}, step=i + 1)
     if args.ckpt:
         checkpoint.save(args.ckpt, {"params": params, "opt": opt_state},
-                        step=start_step + args.steps)
+                        step=end)
         print(f"checkpoint -> {args.ckpt}")
     out = {"arch": cfg.name, "history": history}
     os.makedirs("experiments/train", exist_ok=True)

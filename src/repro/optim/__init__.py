@@ -1,8 +1,27 @@
-"""Pure-pytree optimizers (paper §IV-E: SGD, momentum, Adagrad, Adam)."""
+"""Pure-pytree optimizers (paper §IV-E: SGD, momentum, Adagrad, Adam).
+
+Two layers:
+
+  * ``make_optimizer(name, lr, ...)`` — ONE optimizer over a whole pytree
+    (the homogeneous path; global-norm clipping spans the full tree).
+  * ``make_party_optimizers({party: (name, lr, hparams)}, C)`` — the
+    paper's heterogeneous-optimization setting (§IV-E: each participant
+    picks its OWN optimizer): a partitioned ``PartyOptimizer`` whose
+    state is one pytree keyed like ``params`` (``{"parties": [...]}`` for
+    ``EasterLM``, a plain per-party list for ``EasterClassifier``), with
+    party k's subtree updated by party k's optimizer. Gradient clipping
+    is then per-party by construction — protocol-faithful, since a
+    global norm across parties would require sharing raw gradient
+    magnitudes across trust boundaries. Parties with identical
+    ``(name, lr, hparams)`` share ONE ``Optimizer`` instance, which is
+    what lets ``core/party_engine.PartyEngine.update_groups`` stack
+    their states and vmap the update per (group, optimizer) subgroup.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -121,3 +140,161 @@ def make_optimizer(name: str, lr: float, *, momentum: float = 0.9,
         raise ValueError(f"unknown optimizer {name!r}")
 
     return Optimizer(init=init, update=update, name=name)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous per-party optimization (paper §IV-E)
+# ---------------------------------------------------------------------------
+
+OPTIMIZER_NAMES = ("sgd", "momentum", "adagrad", "adam")
+
+# party k's optimizer spec: a prebuilt Optimizer, "name", (name, lr) or
+# (name, lr, {hparam: value})
+PartySpec = Union[Optimizer, str, Tuple]
+
+
+class PartyOptimizer(NamedTuple):
+    """Partitioned optimizer: party k's param subtree gets ``opts[k]``.
+
+    Duck-type compatible with ``Optimizer`` (init/update/name), so it
+    threads through ``build_train_step`` / ``train_chunk`` / checkpoints
+    unchanged. ``init`` returns states in ONE pytree shaped like the
+    param container — checkpointing {params, opt_state} therefore needs
+    no special casing (``repro.checkpoint`` flattens by path).
+    """
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    name: str
+    opts: Tuple[Optimizer, ...]          # per-party, instances deduped
+
+
+def split_parties(tree) -> Tuple[List[Any], Callable[[List[Any]], Any]]:
+    """(per-party subtrees, rebuild) for the repo's two param containers:
+    ``EasterLM``'s ``{"parties": [...]}`` and ``EasterClassifier``'s
+    plain per-party list."""
+    if isinstance(tree, dict) and "parties" in tree:
+        return list(tree["parties"]), lambda lst: dict(tree, parties=lst)
+    if isinstance(tree, (list, tuple)):
+        t = type(tree)
+        return list(tree), lambda lst: t(lst)
+    raise TypeError(
+        f"params must be {{'parties': [...]}} or a per-party list, got "
+        f"{type(tree).__name__}")
+
+
+def parse_party_spec(text: str) -> Dict[int, Tuple[str, float, Dict]]:
+    """CLI spec -> ``{party: (name, lr, hparams)}``.
+
+    Format: ``k=name:lr[:hparam=value...]`` items, comma-separated, e.g.
+    ``0=sgd:0.01,1=adagrad:0.005,2=momentum:0.01:momentum=0.8``.
+    """
+    out: Dict[int, Tuple[str, float, Dict]] = {}
+    for item in text.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        party, sep, rest = item.partition("=")
+        if not sep or not party.strip().lstrip("-").isdigit():
+            raise ValueError(f"bad party-optimizer item {item!r} "
+                             f"(want k=name:lr[:h=v...])")
+        parts = rest.split(":")
+        name = parts[0].strip().lower()
+        if name not in OPTIMIZER_NAMES:
+            raise ValueError(f"unknown optimizer {name!r} in {item!r} "
+                             f"(one of {OPTIMIZER_NAMES})")
+        if len(parts) < 2:
+            # an explicit spec with a silently-defaulted lr would be a
+            # 100x-off footgun; the caller's default lr applies only to
+            # UNLISTED parties
+            raise ValueError(f"missing lr in {item!r} "
+                             f"(want k=name:lr[:h=v...])")
+        lr = float(parts[1])
+        hp: Dict[str, float] = {}
+        for frag in parts[2:]:
+            hk, hsep, hv = frag.partition("=")
+            if not hsep:
+                raise ValueError(f"bad hparam {frag!r} in {item!r}")
+            hp[hk.strip()] = float(hv)
+        k = int(party)
+        if k in out:
+            raise ValueError(f"party {k} specified twice")
+        out[k] = (name, lr, hp)
+    return out
+
+
+def resolve_party_optimizers(specs, C: int, *,
+                             default: Tuple = ("adam", 1e-3, None)
+                             ) -> List[Optimizer]:
+    """Normalize ``specs`` to C ``Optimizer``s, one per party.
+
+    ``specs``: ``{party: PartySpec}`` (missing parties get ``default``)
+    or a length-C sequence (None entries get ``default``). Identical
+    ``(name, lr, hparams)`` specs resolve to the SAME instance, so
+    engine-side subgrouping (``PartyEngine.update_groups``) can stack
+    their states by identity.
+    """
+    if isinstance(specs, dict):
+        bad = [k for k in specs if not 0 <= int(k) < C]
+        if bad:
+            raise ValueError(f"party indices {bad} out of range [0, {C})")
+        table = {int(k): v for k, v in specs.items()}
+    else:
+        if len(specs) != C:
+            raise ValueError(f"need {C} specs, got {len(specs)}")
+        table = dict(enumerate(specs))
+    cache: Dict[Tuple, Optimizer] = {}
+
+    def build(spec) -> Optimizer:
+        if spec is None:
+            spec = default
+        if callable(getattr(spec, "update", None)):
+            return spec
+        if isinstance(spec, str):
+            spec = (spec, default[1], None)
+        name, lr = spec[0], float(spec[1])
+        hp = dict(spec[2]) if len(spec) > 2 and spec[2] else {}
+        key = (name.lower(), lr, tuple(sorted(hp.items())))
+        if key not in cache:
+            cache[key] = make_optimizer(name, lr, **hp)
+        return cache[key]
+
+    return [build(table.get(k)) for k in range(C)]
+
+
+def make_party_optimizers(specs, C: int, *,
+                          default: Tuple = ("adam", 1e-3, None)
+                          ) -> PartyOptimizer:
+    """Heterogeneous per-party optimization as ONE ``Optimizer``-shaped
+    object (paper §IV-E: SGD/momentum/Adagrad/Adam per participant).
+
+    State layout mirrors ``params`` exactly — ``init`` maps party k's
+    subtree through ``opts[k].init`` and keeps the container, so the
+    combined ``{params, opt_state}`` checkpoint round-trips through
+    ``repro.checkpoint`` with zero special casing. ``update`` applies
+    each party's own optimizer to its own gradient subtree (per-party
+    clipping; see module docstring). The O(C) per-party Python loop here
+    is the correctness layer — ``PartyEngine.update_groups`` is the
+    vectorized twin used at paper scale (C up to 128).
+    """
+    opts = tuple(resolve_party_optimizers(specs, C, default=default))
+
+    def init(params):
+        parties, rebuild = split_parties(params)
+        if len(parties) != C:
+            raise ValueError(f"params hold {len(parties)} parties, "
+                             f"optimizer built for {C}")
+        return rebuild([opts[k].init(p) for k, p in enumerate(parties)])
+
+    def update(grads, state, params):
+        gs, _ = split_parties(grads)
+        ss, _ = split_parties(state)
+        ps, rebuild = split_parties(params)
+        new_p, new_s = [], []
+        for k in range(C):
+            p, s = opts[k].update(gs[k], ss[k], ps[k])
+            new_p.append(p)
+            new_s.append(s)
+        return rebuild(new_p), rebuild(new_s)
+
+    name = "party(" + ",".join(o.name for o in opts) + ")"
+    return PartyOptimizer(init=init, update=update, name=name, opts=opts)

@@ -19,7 +19,7 @@ _spec.loader.exec_module(cmp_mod)
 
 
 def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
-         decode_ms=5.0):
+         decode_ms=5.0, train_ms=20.0):
     rows = [{"C": c, "engine": "vectorized", "batch": 32,
              "use_kernel": False, "fused_masks": False,
              "round_ms": round_ms, "mask_ms": mask_ms,
@@ -29,6 +29,12 @@ def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
                      "batch": 2, "gen": 16,
                      "decode_ms_per_tok": decode_ms,
                      "tokens_per_s": 2e3 / decode_ms})
+    if train_ms is not None:
+        rows.append({"kind": "train", "C": 4, "engine": "vectorized",
+                     "batch": 2, "seq": 8, "chunk": 4,
+                     "train_ms_per_step": train_ms,
+                     "train_tokens_per_s": 2 * 8 * 1e3 / train_ms,
+                     "step_loop_ms_per_step": train_ms * 1.2})
     return {
         "schema": cmp_mod.SCHEMA,
         "calibration_ms": cal,
@@ -36,7 +42,9 @@ def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
                    "n_features": 256, "mask_mode": "float",
                    "mask_only": False,
                    "decode": {"gen": 16, "batch": 2, "prompt": 8,
-                              "arch": "qwen2.5-3b"}},
+                              "arch": "qwen2.5-3b"},
+                   "train": {"chunk": 4, "batch": 2, "seq": 8,
+                             "arch": "qwen2.5-3b"}},
         "rows": rows,
     }
 
@@ -45,8 +53,8 @@ def test_identical_docs_pass():
     base = _doc()
     table, failures = cmp_mod.compare(base, copy.deepcopy(base), 1.5)
     assert not failures
-    # 2 train rows x (round, mask, bytes) + decode row x (ms/tok)
-    assert len(table) == 2 * 3 + 1
+    # 2 sweep rows x (round, mask, bytes) + decode ms/tok + train ms/step
+    assert len(table) == 2 * 3 + 1 + 1
     assert all(r["ok"] for r in table)
 
 
@@ -67,11 +75,33 @@ def test_decode_row_missing_is_lost_coverage():
 
 
 def test_decode_and_train_rows_key_separately():
-    """A kind="decode" row at C=4 must not collide with the C=4 training
-    row (row_key includes the kind discriminator)."""
+    """The kind="decode" and kind="train" rows at C=4 must not collide
+    with the C=4 protocol-round sweep row (row_key includes the kind
+    discriminator)."""
     doc = _doc()
     keys = [cmp_mod.row_key(r) for r in doc["rows"]]
     assert len(set(keys)) == len(keys)
+
+
+def test_train_row_regression_fails():
+    """The fused scan-train throughput row is gated like any other
+    timing: >threshold ms/step slowdown fails, <threshold passes; the
+    informational step_loop_ms_per_step column is NOT gated."""
+    _, failures = cmp_mod.compare(_doc(train_ms=20.0), _doc(train_ms=36.0),
+                                  1.5)
+    assert any("train_ms_per_step" in f for f in failures)
+    _, failures = cmp_mod.compare(_doc(train_ms=20.0), _doc(train_ms=28.0),
+                                  1.5)
+    assert not failures
+    slow_oracle = _doc()
+    slow_oracle["rows"][-1]["step_loop_ms_per_step"] = 1e6
+    _, failures = cmp_mod.compare(_doc(), slow_oracle, 1.5)
+    assert not failures
+
+
+def test_train_row_missing_is_lost_coverage():
+    _, failures = cmp_mod.compare(_doc(), _doc(train_ms=None), 1.5)
+    assert any("train" in f and "missing" in f for f in failures)
 
 
 def test_regression_over_threshold_fails():
@@ -172,16 +202,22 @@ def test_committed_baseline_is_valid():
     path = os.path.join(_ROOT, "benchmarks", "BENCH_many_party.json")
     doc = cmp_mod.load(path)
     assert doc["calibration_ms"] > 0
-    train = [r for r in doc["rows"] if r.get("kind", "train") == "train"]
+    sweep = [r for r in doc["rows"] if "kind" not in r]
     dec = [r for r in doc["rows"] if r.get("kind") == "decode"]
-    assert {r["C"] for r in train} == {4, 16, 64}
-    for r in train:
+    trn = [r for r in doc["rows"] if r.get("kind") == "train"]
+    assert {r["C"] for r in sweep} == {4, 16, 64}
+    for r in sweep:
         for m in ("round_ms", "mask_ms", "bytes_per_round"):
             assert m in r, (r.get("C"), m)
     # v2: the fused scan-decode throughput row must be present + gated
     assert dec, "baseline lost the decode tokens/sec row"
     for r in dec:
         assert r["decode_ms_per_tok"] > 0 and r["cal_ms"] > 0
+    # ... and so must the fused scan-train throughput row
+    assert trn, "baseline lost the train ms/step row"
+    for r in trn:
+        assert r["train_ms_per_step"] > 0 and r["cal_ms"] > 0
+        assert r["step_loop_ms_per_step"] > 0
     # and the gate passes against itself
     table, failures = cmp_mod.compare(doc, copy.deepcopy(doc), 1.5)
     assert not failures and table

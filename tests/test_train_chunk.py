@@ -1,0 +1,337 @@
+"""Fused scan training (core/train_loop.py) vs the step-at-a-time loop.
+
+``train_chunk`` runs N optimizer steps inside ONE ``lax.scan`` with
+(params, opt_state, step_idx) as scan carry and the stacked batches as
+``xs``. It must be BIT-EXACT against a Python loop over the jitted train
+step — same params, same optimizer states, same per-step metrics — for
+every engine (loop oracle, vectorized, sharded party mesh), both wire
+formats (float and int32) and fresh_masks on/off; the per-step masks
+synthesized INSIDE the scan must follow exactly the step loop's
+TRAIN-domain PRF round schedule (raw step indices, ``step0 + i``); and
+the jitted production form must donate the params + optimizer-state
+buffers and lower to a single fused dispatch (one top-level scan
+threading every state leaf — no per-step jit boundary for them to
+cross). A checkpoint taken mid-run (including heterogeneous per-party
+optimizer states) must restore into a continuation that is bit-exact
+with the uninterrupted run.
+"""
+import os
+
+import numpy as np
+import pytest
+
+# the sharded-engine cases need >1 host device; harmless if already set
+N_DEV = 4
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={N_DEV}"
+
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro import checkpoint                                 # noqa: E402
+from repro.configs.base import (EasterConfig, get_config,    # noqa: E402
+                                smoke_variant)
+from repro.core import aggregation, blinding, train_loop     # noqa: E402
+from repro.core.easter_lm import EasterLM                    # noqa: E402
+from repro.optim import make_optimizer, make_party_optimizers  # noqa: E402
+
+B, S, N = 2, 8, 3
+D_EMBED = 64
+STEP0 = 5               # nonzero: a chunk mid-training (post-resume shape)
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < N_DEV,
+    reason="requires multi-device host (XLA_FLAGS set after jax init)")
+
+ENGINES = ["loop", "vectorized", pytest.param("sharded", marks=needs_mesh)]
+
+
+def _lm(engine, mask_mode="float", fresh_masks=True):
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    # num_passive=4 divides the 4-way party axis, so engine="sharded"
+    # actually shards (and engine parity is not vacuous)
+    e = EasterConfig(num_passive=4, d_embed=D_EMBED, decision_layers=1,
+                     mask_mode=mask_mode, fresh_masks=fresh_masks)
+    return EasterLM(cfg=cfg, easter=e, engine=engine)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Params / stacked batches shared by every (engine, mode) cell —
+    init_params is independent of engine and mask_mode."""
+    sys_ = _lm("vectorized")
+    params = sys_.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (N + 1, B, S + 1), 0,
+                              sys_.cfg.vocab_size)
+    batches = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    return params, batches
+
+
+def _opt():
+    return make_optimizer("adam", 1e-3)
+
+
+def _unstack(batches, j):
+    return jax.tree.map(lambda x: x[j], batches)
+
+
+def _step_loop(sys_, opt, params, opt_state, batches, step0, n=N):
+    """The pre-scan driver: ONE jitted train step per round, exactly what
+    launch/train.py --chunk 1 runs (the jit matters: the scan body is
+    compiled, so the oracle must be too)."""
+    step_fn = jax.jit(train_loop.make_train_step(sys_, opt))
+    losses, pers = [], []
+    for j in range(n):
+        params, opt_state, m = step_fn(params, opt_state,
+                                       _unstack(batches, j),
+                                       jnp.asarray(step0 + j, jnp.int32))
+        losses.append(m["loss"])
+        pers.append(m["per_party"])
+    return params, opt_state, {"loss": jnp.stack(losses),
+                               "per_party": jnp.stack(pers)}
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity: fused chunk == jitted step loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("mask_mode", ["float", "int32"])
+@pytest.mark.parametrize("fresh_masks", [True, False])
+def test_chunk_matches_step_loop(setup, engine, mask_mode, fresh_masks):
+    params, batches = setup
+    sys_ = _lm(engine, mask_mode, fresh_masks)
+    opt = _opt()
+    bN = jax.tree.map(lambda x: x[:N], batches)
+
+    fn = train_loop.build_train_chunk(sys_, opt, donate=False)
+    p_c, s_c, step, m_c = fn(params, opt.init(params), bN,
+                             jnp.asarray(STEP0, jnp.int32))
+
+    p_r, s_r, m_r = _step_loop(sys_, opt, params, opt.init(params), bN,
+                               STEP0)
+
+    assert int(step) == STEP0 + N
+    assert m_c["loss"].shape == (N,)
+    assert m_c["per_party"].shape == (N, sys_.C)
+    _assert_trees_equal(m_c, m_r)
+    _assert_trees_equal(p_c, p_r)
+    _assert_trees_equal(s_c, s_r)
+
+
+def test_chunked_training_composes(setup):
+    """Two chunks chained through the returned (params, opt_state, step)
+    carry equal one big chunk — the handoff state is complete (chunk
+    boundaries are invisible to the training trajectory)."""
+    params, batches = setup
+    sys_ = _lm("vectorized")
+    opt = _opt()
+    fn = train_loop.build_train_chunk(sys_, opt, donate=False)
+    bN = jax.tree.map(lambda x: x[:N], batches)
+    p1, s1, _, m1 = fn(params, opt.init(params), bN,
+                       jnp.asarray(STEP0, jnp.int32))
+    k = N // 2
+    pa, sa, step_a, ma = fn(params, opt.init(params),
+                            jax.tree.map(lambda x: x[:k], bN),
+                            jnp.asarray(STEP0, jnp.int32))
+    pb, sb, _, mb = fn(pa, sa, jax.tree.map(lambda x: x[k:], bN), step_a)
+    _assert_trees_equal(p1, pb)
+    _assert_trees_equal(s1, sb)
+    np.testing.assert_array_equal(
+        np.asarray(m1["loss"]),
+        np.concatenate([np.asarray(ma["loss"]), np.asarray(mb["loss"])]))
+
+
+def test_easter_lm_train_chunk_delegates(setup):
+    """EasterLM.train_chunk is the same fused engine (API symmetry with
+    serve_tokens)."""
+    params, batches = setup
+    sys_ = _lm("vectorized")
+    opt = _opt()
+    bN = jax.tree.map(lambda x: x[:N], batches)
+    p_a, s_a, step, m_a = sys_.train_chunk(params, opt.init(params), bN,
+                                           STEP0, opt)
+    fn = train_loop.build_train_chunk(sys_, opt, donate=False)
+    p_b, s_b, _, m_b = fn(params, opt.init(params), bN,
+                          jnp.asarray(STEP0, jnp.int32))
+    assert int(step) == STEP0 + N
+    _assert_trees_equal(p_a, p_b)
+    _assert_trees_equal(s_a, s_b)
+    _assert_trees_equal(m_a, m_b)
+
+
+# ---------------------------------------------------------------------------
+# mask-schedule audit: per-step masks INSIDE the scan == TRAIN-domain PRF
+# counters (step0 + i)
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_mask_schedule_is_train_domain(setup, monkeypatch):
+    """Capture the masks the fused chunk ACTUALLY blinds with (via an
+    ordered debug callback inside the traced body) and pin them to the
+    step loop's TRAIN-domain schedule — bit-exact output parity alone
+    would not prove this, because the pairwise masks cancel in the
+    aggregate."""
+    params, batches = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    opt = _opt()
+    captured = []
+    orig = aggregation.blind_and_aggregate
+
+    def spy(E_all, masks, **kw):
+        if masks is not None:
+            jax.debug.callback(
+                lambda m: captured.append(np.asarray(m)), masks,
+                ordered=True)
+        return orig(E_all, masks, **kw)
+
+    monkeypatch.setattr(aggregation, "blind_and_aggregate", spy)
+    bN = jax.tree.map(lambda x: x[:N], batches)
+    fn = train_loop.build_train_chunk(sys_, opt, donate=False)
+    fn(params, opt.init(params), bN, jnp.asarray(STEP0, jnp.int32))
+    jax.effects_barrier()
+    # N forward masks + N recomputations in the value_and_grad backward
+    # trace is implementation detail; the FORWARD schedule is the first
+    # synthesis per step — dedupe consecutive identical captures
+    assert len(captured) >= N
+    sched = train_loop.train_round_schedule(STEP0, N)
+    np.testing.assert_array_equal(np.asarray(sched),
+                                  STEP0 + np.arange(N))
+    # TRAIN domain: strictly below the serve/prefill offsets
+    assert int(np.asarray(sched).max()) < blinding.SERVE_DOMAIN
+    want = [np.asarray(sys_.masks_for((B, S, D_EMBED), int(sched[i]),
+                                      seeds)) for i in range(N)]
+    got = [m for m in captured if m.shape == want[0].shape]
+    assert len(got) >= N
+    for i in range(N):
+        np.testing.assert_array_equal(got[i], want[i])
+    # and the schedule is injective across steps (fresh pad per step)
+    assert len({m.tobytes() for m in want}) == N
+
+
+def test_static_masks_reuse_single_pad_across_steps():
+    """fresh_masks=False (the paper-literal mode): every chunk step
+    blinds under the SAME static pad — documented semantics, audited so
+    a schedule regression can't silently flip it."""
+    sys_ = _lm("vectorized", fresh_masks=False)
+    seeds = sys_.mask_seeds()
+    m0 = sys_.masks_for((B, S, D_EMBED), STEP0, seeds)
+    m1 = sys_.masks_for((B, S, D_EMBED), STEP0 + 2, seeds)
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+
+
+# ---------------------------------------------------------------------------
+# structure: one fused dispatch, params + opt state donated
+# ---------------------------------------------------------------------------
+
+
+def test_single_toplevel_scan_carries_state(setup):
+    """The whole chunk is ONE top-level scan of length N whose carry
+    threads every param and optimizer-state leaf — i.e. no per-step jit
+    boundary exists for the training state to round-trip through."""
+    params, batches = setup
+    sys_ = _lm("vectorized")
+    opt = _opt()
+    opt_state = opt.init(params)
+    bN = jax.tree.map(lambda x: x[:N], batches)
+    step_fn = train_loop.make_train_step(sys_, opt)
+    closed = jax.make_jaxpr(
+        lambda p, s, b, i: train_loop.train_chunk(step_fn, p, s, b, i))(
+        params, opt_state, bN, jnp.asarray(STEP0, jnp.int32))
+    scans = [e for e in closed.jaxpr.eqns if e.primitive.name == "scan"
+             and e.params["length"] == N]
+    assert len(scans) == 1, "the chunk must lower to one fused scan"
+    n_state = (len(jax.tree.leaves(params))
+               + len(jax.tree.leaves(opt_state)))
+    # carry = every param leaf + every opt-state leaf + step counter
+    assert scans[0].params["num_carry"] == n_state + 1
+
+
+def test_state_donation_recorded_in_lowering(setup):
+    """build_train_chunk donates params AND optimizer state: the
+    lowering must record input->output buffer aliasing for every state
+    leaf (on CPU, XLA falls back to copies at runtime, but the donation
+    contract is in the lowered module — on TPU/GPU the model trains in
+    place)."""
+    params, batches = setup
+    sys_ = _lm("vectorized")
+    opt = _opt()
+    opt_state = opt.init(params)
+    bN = jax.tree.map(lambda x: x[:N], batches)
+    fn = train_loop.build_train_chunk(sys_, opt, donate=True)
+    lowered = fn.lower(params, opt_state, bN, jnp.asarray(STEP0, jnp.int32))
+    txt = lowered.as_text()
+    n_state = (len(jax.tree.leaves(params))
+               + len(jax.tree.leaves(opt_state)))
+    assert txt.count("tf.aliasing_output") >= n_state, \
+        "params/opt-state buffers are not donated in the lowered module"
+
+
+def test_donating_builder_matches_nondonating(setup):
+    """The production donating form returns exactly what the
+    non-donating one does (donation must not change results)."""
+    params, batches = setup
+    sys_ = _lm("vectorized")
+    opt = _opt()
+    bN = jax.tree.map(lambda x: x[:N], batches)
+    want = train_loop.build_train_chunk(sys_, opt, donate=False)(
+        params, opt.init(params), bN, jnp.asarray(STEP0, jnp.int32))
+    # fresh state trees for the donating call: its inputs are consumed
+    fresh = jax.tree.map(jnp.array, params)
+    got = train_loop.build_train_chunk(sys_, opt, donate=True)(
+        fresh, opt.init(fresh), bN, jnp.asarray(STEP0, jnp.int32))
+    _assert_trees_equal(want[0], got[0])
+    _assert_trees_equal(want[1], got[1])
+    _assert_trees_equal(want[3], got[3])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip: save/restore mid-run == uninterrupted run
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_resumes_bit_exact(setup, tmp_path):
+    """{params, opt_state} checkpointed at a chunk boundary and restored
+    into zeroed trees continues BIT-EXACTLY like the uninterrupted run —
+    including heterogeneous per-party optimizer states (sgd's empty
+    state, momentum/adagrad accumulators, adam's (m, v, t))."""
+    params, batches = setup
+    sys_ = _lm("vectorized")
+    opt = make_party_optimizers(
+        {0: ("sgd", 1e-2), 1: ("momentum", 1e-2), 2: ("adagrad", 1e-2),
+         3: ("adam", 1e-3), 4: ("adam", 1e-3)}, sys_.C)
+    fn = train_loop.build_train_chunk(sys_, opt, donate=False)
+    n_all, k = N + 1, 2
+    b_all = jax.tree.map(lambda x: x[:n_all], batches)
+
+    # uninterrupted: one run over all steps
+    p_full, s_full, _, _ = fn(params, opt.init(params), b_all,
+                              jnp.asarray(0, jnp.int32))
+
+    # interrupted: k steps, checkpoint, restore into ZEROED trees, resume
+    p_a, s_a, step_a, _ = fn(params, opt.init(params),
+                             jax.tree.map(lambda x: x[:k], b_all),
+                             jnp.asarray(0, jnp.int32))
+    path = str(tmp_path / "mid.npz")
+    checkpoint.save(path, {"params": p_a, "opt": s_a}, step=int(step_a))
+    zeros = jax.tree.map(jnp.zeros_like,
+                         {"params": params, "opt": opt.init(params)})
+    state, step0 = checkpoint.restore(path, zeros)
+    assert step0 == k
+    _assert_trees_equal(state["params"], p_a)
+    _assert_trees_equal(state["opt"], s_a)
+    p_b, s_b, _, _ = fn(state["params"], state["opt"],
+                        jax.tree.map(lambda x: x[k:], b_all),
+                        jnp.asarray(step0, jnp.int32))
+    _assert_trees_equal(p_full, p_b)
+    _assert_trees_equal(s_full, s_b)
