@@ -6,8 +6,11 @@ Compares a freshly-swept ``BENCH_many_party.json`` (schema
 baseline ``benchmarks/BENCH_many_party.json`` and FAILS (exit 1) when any
 gated timing regresses by more than ``--threshold`` (default 1.5x) —
 protocol round time, mask-synthesis time, the fused scan-decode
-``decode_ms_per_tok`` (the serve-path tokens/sec row) and the fused
-scan-train ``train_ms_per_step`` (the train-path row) — when the
+``decode_ms_per_tok`` (the raw decode-engine row), the fused
+scan-train ``train_ms_per_step`` (the train-path row) and the
+continuous-batching serve tier's ``serve_p99_ms`` / ``serve_ms_per_tok``
+(the end-to-end request-stream row, benchmarks/serve_stream.py) — when
+the
 deterministic wire-bytes accounting grows, or when a baseline row
 vanished from the sweep (lost coverage is a regression too).
 
@@ -38,7 +41,7 @@ SCHEMA = "easter/many-party-bench/v2"
 # per-C protocol-round row round_ms/mask_ms) — absent baseline metrics
 # are skipped per row
 GATED_MS = ("round_ms", "mask_ms", "decode_ms_per_tok",
-            "train_ms_per_step")
+            "train_ms_per_step", "serve_p99_ms", "serve_ms_per_tok")
 # bytes_per_round is deterministic integer accounting with zero noise:
 # ANY growth is a wire-format regression, so the gate is exact equality
 BYTES_TOL = 1.0

@@ -28,9 +28,12 @@ sweeping mask synthesis to C=128 on both engines cheaply.
 ``--save`` writes the tracked perf-dashboard document (schema
 ``easter/many-party-bench/v2``): per-C round/mask timings + wire
 bytes/round, a fused scan-decode throughput row (``kind="decode"``:
-``decode_ms_per_tok`` / ``tokens_per_s`` of ``EasterLM.serve_tokens``,
-core/decode.py, at LLM smoke scale — the serve-path metric the decode
-tentpole optimizes), a fused scan-train throughput row (``kind="train"``:
+``decode_ms_per_tok`` / ``tokens_per_s`` of the lane-batched decode
+engine behind ``core/api.build_decoder``, core/decode.py, at LLM smoke
+scale — the raw engine number), a continuous-batching serve-tier row
+(``kind="serve"``: ``serve_ms_per_tok`` / ``serve_p99_ms`` of a Poisson
+request stream through ``core/serving.ServingEngine`` —
+benchmarks/serve_stream.py), a fused scan-train throughput row (``kind="train"``:
 ``train_ms_per_step`` / ``train_tokens_per_s`` of
 ``train_loop.build_train_chunk``, core/train_loop.py, same smoke scale,
 with the pre-scan step-loop driver as the informational A/B column),
@@ -156,45 +159,50 @@ TRAIN_BATCH, TRAIN_SEQ = 2, 8
 
 
 def time_decode(gen: int, engine: str = "vectorized", reps: int = 3) -> dict:
-    """Fused scan-decode throughput: ``EasterLM.serve_tokens`` (ONE
-    compiled ``lax.scan`` over ``gen`` EASTER serve rounds, blinded
-    uplink per step — core/decode.py) at LLM smoke scale.
+    """Fused scan-decode throughput: the lane-batched decode engine
+    behind ``core/api.build_decoder`` (ONE compiled early-exit loop over
+    ``gen`` EASTER serve rounds, blinded uplink per step with per-lane
+    PRF nonces — core/decode.py) at LLM smoke scale.
 
     ``decode_ms_per_tok`` (min-of-reps steady state) is the gated
     metric; ``tokens_per_s`` is the dashboard-friendly inverse
-    (batch-scaled). The timing loop replays one prefilled cache state,
-    so the builder runs with ``donate_caches=False`` (donation would
-    consume the caches on the first call; the dispatch count — one per
-    generation — is identical either way)."""
+    (batch-scaled). Every lane carries a full-budget request with EOS
+    disabled, so the loop runs exactly ``gen`` rounds — the raw engine
+    number the serve tier's end-to-end row (kind="serve") builds on.
+    The timing loop replays one prefilled ``DecodeState``, so the
+    decoder runs with ``donate=False`` (donation would consume the
+    state on the first call; the dispatch count — one per generation —
+    is identical either way)."""
     from repro.configs.base import get_config, smoke_variant
-    from repro.core import decode as decode_mod
+    from repro.core import api
     from repro.core.easter_lm import EasterLM
 
     cfg = smoke_variant(get_config(DECODE_ARCH))
     e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1)
     lm = EasterLM(cfg=cfg, easter=e, engine=engine)
     params = lm.init_params(jax.random.PRNGKey(0))
-    seeds = lm.mask_seeds()
     toks = jax.random.randint(jax.random.PRNGKey(1),
                               (DECODE_BATCH, DECODE_PROMPT), 0,
                               cfg.vocab_size)
-    caches = lm.init_caches(DECODE_BATCH, DECODE_PROMPT + gen)
-    prefill = jax.jit(lambda p, t, c: lm.prefill(p, t, c, seeds=seeds,
-                                                 round_idx=0))
-    _, caches = prefill(params, toks[:, :-1], caches)
-    jax.block_until_ready(jax.tree.leaves(caches)[0])
-    fn = decode_mod.build_serve_tokens(lm, gen, temperature=0.0,
-                                       donate_caches=False)
-    pos = jnp.asarray(DECODE_PROMPT - 1, jnp.int32)
-    key = jax.random.PRNGKey(2)
+    dcfg = api.DecodeConfig(lanes=DECODE_BATCH,
+                            max_len=DECODE_PROMPT + gen, chunk=gen,
+                            donate=False)
+    prefill_fn, decode_fn = api.build_decoder(lm, dcfg)
+    state = api.init_decode_state(lm, dcfg)
+    for lane in range(DECODE_BATCH):
+        req = api.ServeRequest(
+            tokens=tuple(int(t) for t in toks[lane].tolist()),
+            max_new_tokens=gen, eos_id=-1, temperature=0.0)
+        state = prefill_fn(params, state, req, lane, nonce=lane)
+    jax.block_until_ready(state.pos)
     t0 = time.perf_counter()
-    out = fn(params, toks[:, -1:], caches, pos, key)
+    out = decode_fn(params, state)
     jax.block_until_ready(out[0])
     compile_s = time.perf_counter() - t0
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        out = fn(params, toks[:, -1:], caches, pos, key)
+        out = decode_fn(params, state)
         jax.block_until_ready(out[0])
         best = min(best, time.perf_counter() - t0)
     row = {"kind": "decode", "C": 4, "engine": engine,
@@ -318,7 +326,8 @@ def calibration_ms(reps: int = 50) -> float:
 
 _MIN_MERGE = ("setup_s", "mask_first_ms", "mask_ms", "round_ms",
               "compile_s", "cal_ms", "decode_ms_per_tok",
-              "train_ms_per_step", "step_loop_ms_per_step")
+              "train_ms_per_step", "step_loop_ms_per_step",
+              "serve_ms_per_tok", "serve_p50_ms", "serve_p99_ms")
 
 
 def _merge_min(prev: dict, new: dict) -> dict:
@@ -337,14 +346,48 @@ def _merge_min(prev: dict, new: dict) -> dict:
     if "train_ms_per_step" in out and out["train_ms_per_step"] > 0:
         out["train_tokens_per_s"] = (out["batch"] * out["seq"] * 1e3
                                      / out["train_ms_per_step"])
+    if "serve_ms_per_tok" in out and out["serve_ms_per_tok"] > 0:
+        out["agg_tokens_per_s"] = 1e3 / out["serve_ms_per_tok"]
     return out
+
+
+def _serve_stream_mod():
+    """Load benchmarks/serve_stream.py next to this file (the benchmarks
+    dir is not a package; loading by path keeps both scripts runnable
+    from any cwd)."""
+    import importlib.util
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "serve_stream.py")
+    spec = importlib.util.spec_from_file_location("serve_stream", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
         mask_mode, loop_max_c, fused_masks=False, mask_only=False,
-        save=None, repeat=1, decode_gen=0, train_chunk=0):
+        save=None, repeat=1, decode_gen=0, train_chunk=0,
+        serve_requests=0, serve_lanes=8):
     merged = {}
+    ss = _serve_stream_mod() if serve_requests and not mask_only else None
     for rep in range(repeat):
+        if ss is not None:
+            # continuous-batching serve tier end-to-end (Poisson request
+            # stream through core/serving.ServingEngine; see
+            # serve_stream.time_serve). Engine pinned like the decode row.
+            sv_eng = engines[0] if len(set(engines)) == 1 else "vectorized"
+            r = ss.time_serve(serve_lanes, serve_requests, engine=sv_eng)
+            k_sv = ("serve", r["engine"])
+            merged[k_sv] = (r if k_sv not in merged
+                            else _merge_min(merged[k_sv], r))
+            rm = merged[k_sv]
+            print(f"many_party serve  engine={r['engine']:10s} "
+                  f"req {serve_requests:2d} x{serve_lanes} lanes  "
+                  f"{rm['serve_ms_per_tok']:8.2f} ms/tok aggregate  "
+                  f"(p50 {rm['serve_p50_ms']:6.1f} ms, "
+                  f"p99 {rm['serve_p99_ms']:6.1f} ms)  "
+                  f"compile {r['compile_s']:6.1f} s"
+                  + (f"  [pass {rep + 1}/{repeat}]" if repeat > 1 else ""))
         if train_chunk and not mask_only:
             # fused scan-train throughput (see time_train). Swept once
             # per pass like every other cell so the min-merge defeats
@@ -449,6 +492,12 @@ def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
                                   "arch": DECODE_ARCH},
                        "train": {"chunk": train_chunk,
                                  "batch": TRAIN_BATCH, "seq": TRAIN_SEQ,
+                                 "arch": DECODE_ARCH},
+                       "serve": {"requests": serve_requests,
+                                 "lanes": serve_lanes,
+                                 "prompt": (ss.SERVE_PROMPT if ss else 0),
+                                 "gen": (ss.SERVE_GEN if ss else 0),
+                                 "chunk": (ss.SERVE_CHUNK if ss else 0),
                                  "arch": DECODE_ARCH}},
             "rows": rows,
         }
@@ -493,6 +542,12 @@ def main():
     ap.add_argument("--train-chunk", type=int, default=4,
                     help="optimizer steps per fused scan-train "
                          "throughput row (kind=\"train\"; 0 = skip)")
+    ap.add_argument("--serve-requests", type=int, default=16,
+                    help="requests in the continuous-batching serve-tier "
+                         "row (kind=\"serve\", benchmarks/serve_stream.py; "
+                         "0 = skip)")
+    ap.add_argument("--serve-lanes", type=int, default=8,
+                    help="decode lanes for the kind=\"serve\" row")
     ap.add_argument("--repeat", type=int, default=1,
                     help="sweep every cell this many times (min-merged) — "
                          "defeats minute-scale host speed-regime drift")
@@ -505,6 +560,7 @@ def main():
         a.batch, a.rounds, a.n_features, a.d_embed = 32, 5, 256, 64
         a.decode_gen = 16
         a.train_chunk = 4
+        a.serve_requests, a.serve_lanes = 16, 8
         a.repeat = max(a.repeat, 2)
         save = a.save
     elif a.smoke:
@@ -512,6 +568,7 @@ def main():
         a.batch, a.rounds, a.n_features = 32, 5, 256
         a.decode_gen = 0
         a.train_chunk = 0
+        a.serve_requests = 0
         save = None
     else:
         cs = [int(c) for c in a.cs.split(",")]
@@ -522,7 +579,8 @@ def main():
         a.use_kernel, a.mask_mode, a.loop_max_c,
         fused_masks=a.fused_masks, mask_only=a.mask_only, save=save,
         repeat=a.repeat, decode_gen=a.decode_gen,
-        train_chunk=a.train_chunk)
+        train_chunk=a.train_chunk, serve_requests=a.serve_requests,
+        serve_lanes=a.serve_lanes)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,277 @@
+"""Continuous-batching serve-tier benchmark: Poisson request stream.
+
+Drives a fixed-seed open-loop request stream (mixed prompt lengths and
+token budgets, Poisson arrivals) through ``core/serving.ServingEngine``
+— the R-lane continuous-batching scheduler over the fused lane decoder
+(``core/api.build_decoder``) — and reports request latency percentiles
+plus aggregate decoded tokens/s. Every decoded token is ONE blinded
+EASTER protocol round shared by all live lanes, so the aggregate
+throughput is the direct measure of how well the serve tier amortizes
+the federation's per-round cost (mask synthesis + blinded uplink +
+aggregation) over concurrent requests.
+
+``time_serve`` is the importable probe behind the dashboard's
+``kind="serve"`` row (swept by ``many_party_scaling.py --gate``, gated
+by ``compare.py`` on ``serve_p99_ms`` and ``serve_ms_per_tok``). The
+workload is generated from a fixed seed and decoded greedily, so token
+counts are bit-identical across reps and sweeps — only the wall clock
+moves. The first run compiles (one decode-chunk program + one prefill
+program per prompt-length bucket); timed reps replay the workload
+through ``ServingEngine.reset()`` with everything warm.
+
+Standalone A/B acceptance runs (``--ab``):
+    PYTHONPATH=src python benchmarks/serve_stream.py --ab
+checks the two serve-tier claims: batched lanes beat sequential
+single-stream service >= 3x on aggregate tokens/s, and EOS/budget
+early-exit beats pad-to-max decoding on a mixed workload (< 60% of its
+wall clock).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EasterConfig, get_config, smoke_variant
+from repro.core import api, serving
+from repro.core.easter_lm import EasterLM
+
+# the serve row's fixed shape — LLM smoke scale, C=4 (the paper's party
+# count), same federation as the decode/train rows. MUST stay in sync
+# with the committed baseline's config block.
+SERVE_ARCH = "qwen2.5-3b"
+SERVE_LANES, SERVE_REQUESTS = 8, 16
+SERVE_PROMPT, SERVE_GEN, SERVE_CHUNK = 8, 8, 4
+
+
+def build_lm(engine: str = "vectorized"):
+    cfg = smoke_variant(get_config(SERVE_ARCH))
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1)
+    lm = EasterLM(cfg=cfg, easter=e, engine=engine)
+    params = lm.init_params(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+def make_workload(requests: int, prompt_len: int, gen: int, vocab: int,
+                  *, eos_id: int = 7, seed: int = 0,
+                  rate: float = 1000.0, min_new: int | None = None,
+                  bimodal: bool = False):
+    """Fixed-seed mixed workload + Poisson arrival schedule.
+
+    Prompt lengths come from a few fixed buckets (each distinct length
+    compiles one prefill program — an unbucketed draw would pay
+    O(requests) compiles); budgets are uniform on [min_new, gen]. The
+    arrival schedule is drawn once from the same seed, so reps replay
+    the IDENTICAL stream."""
+    rng = np.random.default_rng(seed)
+    step = max(2, prompt_len // 4)
+    buckets = sorted({max(2, b) for b in
+                      range(step, prompt_len + 1, step)})
+    lo = max(1, gen // 4) if min_new is None else min_new
+    reqs = []
+    for _ in range(requests):
+        plen = int(rng.choice(buckets))
+        if bimodal:
+            # the mixed short/long shape: mostly short completions, a
+            # long tail pinned at the full budget — the regime where a
+            # fixed-batch server pads every wave to the longest member
+            budget = (gen if rng.random() < 0.25
+                      else int(rng.integers(1, max(2, gen // 4) + 1)))
+        else:
+            budget = max(1, int(rng.integers(lo, gen + 1)))
+        reqs.append(api.ServeRequest(
+            tokens=tuple(int(t) for t in
+                         rng.integers(0, vocab, size=plen)),
+            max_new_tokens=budget,
+            eos_id=eos_id, temperature=0.0))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate,
+                                         size=requests)).tolist()
+    return reqs, arrivals
+
+
+def _run_stream(eng, reqs, arrivals):
+    t0 = time.perf_counter()
+    comps = eng.run(reqs, arrivals=arrivals)
+    wall = time.perf_counter() - t0
+    toks = sum(len(c.tokens) for c in comps)
+    lat = sorted(c.latency_s for c in comps)
+    p50 = lat[len(lat) // 2] * 1e3
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3
+    return wall, toks, p50, p99
+
+
+def time_serve(lanes: int = SERVE_LANES, requests: int = SERVE_REQUESTS,
+               engine: str = "vectorized", reps: int = 3, *,
+               prompt_len: int = SERVE_PROMPT, gen: int = SERVE_GEN,
+               chunk: int = SERVE_CHUNK, eos_id: int = 7,
+               seed: int = 0) -> dict:
+    """The ``kind="serve"`` dashboard row: Poisson stream end-to-end.
+
+    ``serve_ms_per_tok`` (min-of-reps aggregate wall / decoded tokens)
+    and ``serve_p99_ms`` (min-of-reps tail latency) are the gated
+    metrics; ``agg_tokens_per_s`` is the dashboard-friendly inverse.
+    Min over reps per metric — the fastest observation estimates
+    capability, same statistic as every other cell."""
+    cfg, lm, params = build_lm(engine)
+    eng = serving.ServingEngine(lm, params, lanes=lanes,
+                                max_len=prompt_len + gen, chunk=chunk,
+                                base_key=seed)
+    reqs, arrivals = make_workload(requests, prompt_len, gen,
+                                   cfg.vocab_size, eos_id=eos_id,
+                                   seed=seed)
+    t0 = time.perf_counter()
+    _run_stream(eng, reqs, arrivals)            # compile + warm caches
+    compile_s = time.perf_counter() - t0
+    best = {"wall": float("inf"), "p50": float("inf"),
+            "p99": float("inf")}
+    toks = 0
+    for _ in range(reps):
+        eng.reset()
+        wall, toks, p50, p99 = _run_stream(eng, reqs, arrivals)
+        best["wall"] = min(best["wall"], wall)
+        best["p50"] = min(best["p50"], p50)
+        best["p99"] = min(best["p99"], p99)
+    row = {"kind": "serve", "C": 4, "engine": engine, "lanes": lanes,
+           "requests": requests, "prompt": prompt_len, "gen": gen,
+           "chunk": chunk, "tokens": toks,
+           "serve_ms_per_tok": best["wall"] * 1e3 / toks,
+           "agg_tokens_per_s": toks / best["wall"],
+           "serve_p50_ms": best["p50"], "serve_p99_ms": best["p99"],
+           "rounds": eng.rounds_run, "chunks": eng.chunks_run,
+           "compile_s": compile_s, "cal_ms": calibration_ms(20)}
+    return row
+
+
+def calibration_ms(reps: int = 50) -> float:
+    """Host-speed probe — the same jitted-matmul MIN statistic as
+    many_party_scaling.calibration_ms (duplicated so both benchmarks
+    stay standalone scripts), consumed by compare.py to normalize this
+    row across hosts."""
+    x = jnp.ones((1024, 1024), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    for _ in range(5):
+        jax.block_until_ready(f(x))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def ab_throughput(engine: str = "vectorized", requests: int = 16,
+                  gen: int = 32, seed: int = 0) -> dict:
+    """Acceptance A/B #1: R-lane continuous batching vs single-stream
+    service through the SAME engine (one request admitted at a time,
+    the other lanes idle — a server with no request batching). Because
+    the decoder's numerics are content-independent at fixed lane shape,
+    both sides emit bit-identical tokens per request ("equal per-token
+    numerics"); the speedup is purely the protocol rounds each decoded
+    token shares. Closed loop (all arrive at t=0), warm timed runs.
+    Target: aggregate tokens/s >= 3x."""
+    cfg, lm, params = build_lm(engine)
+    reqs, _ = make_workload(requests, SERVE_PROMPT, gen, cfg.vocab_size,
+                            seed=seed)
+    zeros = [0.0] * len(reqs)
+    eng = serving.ServingEngine(lm, params, lanes=SERVE_LANES,
+                                max_len=SERVE_PROMPT + gen,
+                                chunk=SERVE_CHUNK, base_key=seed)
+    _run_stream(eng, reqs, zeros)               # compile
+    eng.reset()
+    wall, toks, _, _ = _run_stream(eng, reqs, zeros)
+    by_nonce = {c.nonce: c.tokens for c in eng.completions}
+    out = {"batched": {"lanes": SERVE_LANES, "wall_s": wall,
+                       "tokens": toks, "tok_s": toks / wall}}
+    eng.reset()
+    t0 = time.perf_counter()
+    for req in reqs:                            # one request at a time
+        eng.run([req], arrivals=[0.0])
+    wall = time.perf_counter() - t0
+    toks = sum(len(c.tokens) for c in eng.completions)
+    out["sequential"] = {"lanes": SERVE_LANES, "wall_s": wall,
+                         "tokens": toks, "tok_s": toks / wall}
+    # equal per-token numerics: admission order == nonce order on both
+    # sides, and rows are content-independent at fixed lane shape
+    out["tokens_equal"] = all(by_nonce[c.nonce] == c.tokens
+                              for c in eng.completions)
+    out["speedup"] = out["batched"]["tok_s"] / out["sequential"]["tok_s"]
+    return out
+
+
+def ab_early_exit(engine: str = "vectorized", requests: int = 16,
+                  lanes: int = 4, gen: int = 32, seed: int = 0) -> dict:
+    """Acceptance A/B #2: bimodal short/long workload with EOS/budget
+    early-exit + slot refill vs the identical stream with early-exit
+    disabled (every request padded to the max budget, EOS ignored —
+    every wave of a fixed-batch server runs as long as its longest
+    member). requests >> lanes so the stream runs several waves: the
+    win is freed slots refilling mid-flight instead of idling to the
+    wave boundary. Target: < 60% of the no-exit wall clock."""
+    cfg, lm, params = build_lm(engine)
+    reqs, _ = make_workload(requests, SERVE_PROMPT, gen, cfg.vocab_size,
+                            seed=seed, bimodal=True)
+    zeros = [0.0] * len(reqs)
+    out = {}
+    for label, kw in (("early_exit", {}),
+                      ("no_exit", {"early_exit": False,
+                                   "no_exit_budget": gen})):
+        eng = serving.ServingEngine(lm, params, lanes=lanes,
+                                    max_len=SERVE_PROMPT + gen,
+                                    chunk=SERVE_CHUNK, base_key=seed,
+                                    **kw)
+        _run_stream(eng, reqs, zeros)           # compile
+        eng.reset()
+        wall, toks, _, _ = _run_stream(eng, reqs, zeros)
+        out[label] = {"wall_s": wall, "tokens": toks,
+                      "rounds": eng.rounds_run}
+    out["ratio"] = out["early_exit"]["wall_s"] / out["no_exit"]["wall_s"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="vectorized",
+                    choices=["vectorized", "sharded", "loop"])
+    ap.add_argument("--lanes", type=int, default=SERVE_LANES)
+    ap.add_argument("--requests", type=int, default=SERVE_REQUESTS)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--ab", action="store_true",
+                    help="run the two serve-tier acceptance A/Bs "
+                         "(batched-vs-sequential throughput, "
+                         "early-exit-vs-pad-to-max wall clock)")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    if a.ab:
+        t = ab_throughput(a.engine, requests=a.requests, seed=a.seed)
+        ok = t["speedup"] >= 3.0 and t["tokens_equal"]
+        print(f"A/B throughput: batched {t['batched']['lanes']} lanes "
+              f"{t['batched']['tok_s']:8.1f} tok/s vs single-stream "
+              f"{t['sequential']['tok_s']:8.1f} tok/s -> "
+              f"{t['speedup']:.2f}x (target >= 3x), per-token numerics "
+              f"{'equal' if t['tokens_equal'] else 'DIFFER'} "
+              f"{'PASS' if ok else 'FAIL'}")
+        e = ab_early_exit(a.engine, requests=a.requests, seed=a.seed)
+        ok2 = e["ratio"] < 0.60
+        print(f"A/B early-exit: {e['early_exit']['wall_s'] * 1e3:8.1f} ms "
+              f"({e['early_exit']['rounds']} rounds) vs no-exit "
+              f"{e['no_exit']['wall_s'] * 1e3:8.1f} ms "
+              f"({e['no_exit']['rounds']} rounds) -> "
+              f"{e['ratio'] * 100:.1f}% of no-exit wall "
+              f"(target < 60%) {'PASS' if ok2 else 'FAIL'}")
+        raise SystemExit(0 if ok and ok2 else 1)
+    r = time_serve(a.lanes, a.requests, a.engine, a.reps, seed=a.seed)
+    print(f"serve engine={r['engine']} lanes={r['lanes']} "
+          f"requests={r['requests']} chunk={r['chunk']}: "
+          f"{r['tokens']} tokens, {r['agg_tokens_per_s']:.1f} tok/s "
+          f"aggregate ({r['serve_ms_per_tok']:.2f} ms/tok), "
+          f"latency p50 {r['serve_p50_ms']:.1f} ms "
+          f"p99 {r['serve_p99_ms']:.1f} ms, "
+          f"{r['rounds']} rounds / {r['chunks']} chunks, "
+          f"compile {r['compile_s']:.1f} s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,20 @@
-"""Batched-request EASTER serving example: prefill a batch of prompts,
-then generate every token inside ONE fused scan-decode dispatch
-(core/decode.py) — one aggregated-embedding round per step, with every
-party's KV cache threaded as device-resident scan carry and the cache
-buffers donated to the compiled program.
+"""Batched-request EASTER serving example, on the typed serving surface
+(``core/api.py``): prompts become ``ServeRequest``s, prefilled into
+decode lanes and generated inside fused decode-chunk dispatches
+(core/decode.py) — one aggregated-embedding round per decoded token,
+shared by every live lane, with each party's KV cache device-resident
+across rounds.
 
     PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
     PYTHONPATH=src python examples/serve_decode.py --gen 32 --step-loop
+    PYTHONPATH=src python examples/serve_decode.py --requests 8
 
-``--step-loop`` replays the pre-scan driver (one jitted serve_step
-dispatch per token) for an A/B comparison; both print tokens/sec and
-sample the same token ids (proven bit-exact in
-tests/test_decode_scan.py).
+``--requests N`` streams N mixed-length requests through the
+continuous-batching scheduler (core/serving.py: EOS early-exit, freed
+lanes refilled mid-flight, Poisson arrivals). ``--step-loop`` replays
+the pre-scan driver (one jitted serve_step dispatch per token) for an
+A/B comparison; the batched engine's per-lane numerics are proven
+against single-stream oracles in tests/test_serving.py.
 """
 import argparse
 import os
@@ -22,17 +26,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-2.7b")
     ap.add_argument("--gen", type=int, default=16,
-                    help="tokens to generate (= fused scan length)")
+                    help="token budget per request")
     ap.add_argument("--engine", default="vectorized",
                     choices=["vectorized", "sharded", "loop"])
+    ap.add_argument("--requests", type=int, default=0,
+                    help="stream N requests through the "
+                         "continuous-batching scheduler (Poisson "
+                         "arrivals) instead of one fixed batch")
     ap.add_argument("--step-loop", action="store_true",
                     help="decode one jitted serve_step at a time instead "
-                         "of the fused scan (A/B reference)")
+                         "of the fused lane engine (A/B reference)")
     a = ap.parse_args()
     # thin alias of the serving launcher with example-friendly defaults
     cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", a.arch,
            "--smoke", "--batch", "4", "--prompt-len", "24",
            "--gen", str(a.gen), "--engine", a.engine]
+    if a.requests:
+        cmd += ["--requests", str(a.requests), "--poisson"]
     if a.step_loop:
         cmd.append("--step-loop")
     # inherit the full environment (JAX_PLATFORMS, XLA_FLAGS, ... — a

@@ -26,8 +26,28 @@ scan started at position p blinds under PRF round ``SERVE_DOMAIN + p + i``
 loop produces. tests/test_decode_scan.py pins bit-exactness of tokens,
 logits and final caches against the step loop for all three engines,
 float and int32 wire formats, fresh_masks on and off.
+
+Batched serving (``decode_chunk`` / ``build_decode_chunk``): the same
+serve_step drives R concurrent request LANES through one protocol round
+per generated token — the whole federation's per-round cost (mask
+synthesis, blinded uplink, aggregation) is amortized over R users. Lanes
+carry per-lane positions, nonces (PRF round = ``blinding.serve_round``),
+sampling keys and temperatures, and a ``done`` flag: a lane that emitted
+its EOS (or exhausted its budget) freezes — its caches stop mutating, its
+uplink rows are zeroed (see ``EasterLM._aggregate``), its output is pad —
+and a whole-batch ``lax.while_loop`` cutoff ends the chunk as soon as
+every lane is done, so short requests never pay a long request's budget.
+The scheduling layer that refills freed lanes mid-flight lives in
+``core/serving.py``; the typed request API in ``core/api.py``.
+
+DEPRECATED surface: ``serve_tokens`` / ``build_serve_tokens`` (the
+positional single-stream signatures) are shims over ``_serve_tokens_impl``
+for one release — new callers use ``core.api.build_decoder``.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -43,30 +63,54 @@ def serve_round_schedule(pos, n_steps: int) -> jnp.ndarray:
     have used at position ``pos + i``. Audited against the step loop's
     per-step masks in tests/test_decode_scan.py. (With
     ``fresh_masks=False`` the schedule is irrelevant by design: every
-    round collapses to the paper's single static pad.)
+    round collapses to the paper's single static pad.) Batched serving
+    replaces this with the per-lane ``blinding.serve_round`` schedule.
     """
     return (blinding.SERVE_DOMAIN + jnp.asarray(pos, jnp.int32)
             + jnp.arange(n_steps, dtype=jnp.int32))
 
 
-def sample_token(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+def sample_token(logits: jnp.ndarray, key, temperature, *, done=None,
+                 pad_id: int = 0) -> jnp.ndarray:
     """One sampling decision: logits (B, V) -> tokens (B, 1) int32.
 
-    ``temperature <= 0`` is greedy argmax (no randomness consumed);
-    otherwise temperature-scaled categorical sampling. Kept as a free
-    function so the step-loop driver and the fused scan share one
-    definition — parity tests compare the two drivers through it.
+    ONE code path for greedy and sampled decoding, scalar- and per-lane:
+
+      * ``temperature`` a Python float — the legacy whole-batch form:
+        <= 0 is greedy argmax (no randomness consumed), > 0 is
+        temperature-scaled categorical under a single ``key``.
+      * ``temperature`` an (B,) array — per-lane mixing: ``key`` is then
+        (B, 2) per-lane keys, each lane draws its own categorical (or
+        argmax where its temperature is 0), so a greedy lane and a
+        sampled lane coexist in one batch with single-stream-identical
+        bits per lane.
+
+    ``done`` (B,) bool masks finished lanes' outputs to ``pad_id`` —
+    frozen lanes emit pad, never fresh tokens. Kept as a free function so
+    the step-loop driver, the fused scan and the batched lane engine all
+    share one definition — parity tests compare the drivers through it.
     """
-    if temperature > 0:
-        return jax.random.categorical(
-            key, logits / temperature)[:, None].astype(jnp.int32)
-    return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    if isinstance(temperature, (int, float)):
+        if temperature > 0:
+            nxt = jax.random.categorical(key, logits / temperature)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+    else:
+        t = jnp.asarray(temperature, jnp.float32)            # (B,)
+        safe = jnp.where(t > 0, t, 1.0)                      # no div-by-0
+        sampled = jax.vmap(jax.random.categorical)(key, logits
+                                                   / safe[:, None])
+        nxt = jnp.where(t > 0, sampled, jnp.argmax(logits, axis=-1))
+    nxt = nxt[:, None].astype(jnp.int32)
+    if done is not None:
+        nxt = jnp.where(done[:, None], jnp.asarray(pad_id, jnp.int32), nxt)
+    return nxt
 
 
-def serve_tokens(sys, params, tokens, caches, pos, n_steps: int, seeds, *,
-                 key=None, temperature: float = 0.0,
-                 window_override: int = -1, fe_list=None,
-                 return_logits: bool = False):
+def _serve_tokens_impl(sys, params, tokens, caches, pos, n_steps: int,
+                       seeds, *, key=None, temperature: float = 0.0,
+                       window_override: int = -1, fe_list=None,
+                       return_logits: bool = False):
     """Generate ``n_steps`` tokens in one ``lax.scan`` (one trace/compile).
 
     Args:
@@ -86,9 +130,8 @@ def serve_tokens(sys, params, tokens, caches, pos, n_steps: int, seeds, *,
 
     Returns ``(out_tokens, caches, pos, key)`` with ``out_tokens``
     (B, n_steps) int32 and ``pos``/``key``/``caches`` advanced past the
-    generation (ready for a further ``serve_tokens`` call — chunked
-    generation composes); with ``return_logits``, a trailing ``logits``
-    element is appended.
+    generation (ready for a further call — chunked generation composes);
+    with ``return_logits``, a trailing ``logits`` element is appended.
     """
     if temperature > 0 and key is None:
         raise ValueError("temperature > 0 sampling needs a PRNG key")
@@ -119,11 +162,30 @@ def serve_tokens(sys, params, tokens, caches, pos, n_steps: int, seeds, *,
     return out, caches, pos, key
 
 
+_DEPRECATION = (
+    "the positional serve_tokens/build_serve_tokens signatures are "
+    "deprecated (kept for one release): use core.api.build_decoder — the "
+    "typed ServeRequest/DecodeState surface with request batching and "
+    "EOS early-exit")
+
+
+def serve_tokens(sys, params, tokens, caches, pos, n_steps: int, seeds, *,
+                 key=None, temperature: float = 0.0,
+                 window_override: int = -1, fe_list=None,
+                 return_logits: bool = False):
+    """DEPRECATED shim over ``_serve_tokens_impl`` (numerics unchanged)."""
+    warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
+    return _serve_tokens_impl(
+        sys, params, tokens, caches, pos, n_steps, seeds, key=key,
+        temperature=temperature, window_override=window_override,
+        fe_list=fe_list, return_logits=return_logits)
+
+
 def build_serve_tokens(sys, n_steps: int, *, temperature: float = 0.0,
                        window_override: int = -1, fe_list=None,
                        donate_caches: bool = True,
                        return_logits: bool = False):
-    """Jitted fused-decode step: ``fn(params, tokens, caches, pos, key)``.
+    """DEPRECATED shim: jitted ``fn(params, tokens, caches, pos, key)``.
 
     The ONE DH ceremony is resolved here (``sys.mask_seeds()`` is memoized
     down to the blinding-level cache, shared with the train/prefill step
@@ -135,14 +197,99 @@ def build_serve_tokens(sys, n_steps: int, *, temperature: float = 0.0,
     ``donate_caches=False`` for benchmark loops that replay one cache
     state). On backends without donation support (CPU) XLA silently falls
     back to copying; the aliasing is still recorded in the lowering
-    (pinned by tests/test_decode_scan.py).
+    (pinned by tests/test_decode_scan.py). New callers:
+    ``core.api.build_decoder``.
     """
+    warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
     seeds = sys.mask_seeds()
 
     def run(params, tokens, caches, pos, key):
-        return serve_tokens(sys, params, tokens, caches, pos, n_steps,
-                            seeds, key=key, temperature=temperature,
-                            window_override=window_override,
-                            fe_list=fe_list, return_logits=return_logits)
+        return _serve_tokens_impl(
+            sys, params, tokens, caches, pos, n_steps, seeds, key=key,
+            temperature=temperature, window_override=window_override,
+            fe_list=fe_list, return_logits=return_logits)
 
     return jax.jit(run, donate_argnums=(2,) if donate_caches else ())
+
+
+# ---------------------------------------------------------------------------
+# batched lane decode (continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+
+def _freeze(new, old, active):
+    """Per-lane cache freeze: keep a finished lane's cache leaves (and any
+    other (reps, B, ...) state) bit-identical to their pre-step values.
+    Every stacked cache leaf carries the lane axis at position 1."""
+    def sel(n, o):
+        keep = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(keep, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def decode_chunk(sys, params, state, n_steps: int, seeds, *,
+                 pad_id: int = 0):
+    """Up to ``n_steps`` lane-batched serve rounds in ONE ``lax.while_loop``.
+
+    ``state`` is a ``core.api.DecodeState``: R request lanes with per-lane
+    token, position, nonce, sampling key/temperature, EOS id, remaining
+    budget and ``done`` flag, plus per-lane KV caches
+    (``init_caches(per_lane=True)``). Each iteration is one protocol
+    round shared by every ACTIVE lane (per-lane PRF rounds via
+    ``blinding.serve_round`` — no pad sharing across lanes); finished
+    lanes are frozen (zero uplink, caches/pos/key untouched, pad output).
+    The loop exits as soon as every lane is done — an all-short batch
+    never runs the full chunk (EOS early-exit), which is what makes
+    per-request budgets cheap under continuous batching.
+
+    Returns ``(tokens (R, n_steps) int32, state, steps_run)``; token slots
+    past a lane's completion (or past ``steps_run``) hold ``pad_id``.
+    """
+    R = state.tok.shape[0]
+    buf0 = jnp.full((R, n_steps), pad_id, jnp.int32)
+
+    def cond(carry):
+        i, st, _ = carry
+        return (i < n_steps) & jnp.any(~st.done)
+
+    def body(carry):
+        i, st, buf = carry
+        active = ~st.done
+        logits, cc = sys.serve_step(params, st.tok, st.caches, st.pos,
+                                    seeds, lane_mask=active,
+                                    nonces=st.nonce)
+        ks = jax.vmap(jax.random.split)(st.key)          # (R, 2, 2)
+        nxt = sample_token(logits[:, -1], ks[:, 1], st.temp,
+                           done=st.done, pad_id=pad_id)
+        cc = _freeze(cc, st.caches, active)
+        key = jnp.where(active[:, None], ks[:, 0], st.key)
+        step = active.astype(jnp.int32)
+        rem = st.remaining - step
+        hit_eos = active & (st.eos >= 0) & (nxt[:, 0] == st.eos)
+        done = st.done | hit_eos | (rem <= 0)
+        buf = jax.lax.dynamic_update_slice_in_dim(buf, nxt, i, axis=1)
+        tok = jnp.where(active[:, None], nxt, st.tok)
+        st = dataclasses.replace(st, tok=tok, caches=cc, pos=st.pos + step,
+                                 key=key, done=done, remaining=rem)
+        return i + 1, st, buf
+
+    steps, state, buf = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), state, buf0))
+    return buf, state, steps
+
+
+def build_decode_chunk(sys, n_steps: int, *, pad_id: int = 0,
+                       donate_state: bool = True):
+    """Jitted lane-batched chunk: ``fn(params, state) -> (buf, state, n)``.
+
+    ``state`` is donated by default (the caller rebinds to the returned
+    state, caches stay device-resident across chunks); pass
+    ``donate_state=False`` for benchmark loops replaying one state.
+    """
+    seeds = sys.mask_seeds()
+
+    def run(params, state):
+        return decode_chunk(sys, params, state, n_steps, seeds,
+                            pad_id=pad_id)
+
+    return jax.jit(run, donate_argnums=(1,) if donate_state else ())

@@ -229,15 +229,26 @@ class EasterLM:
                 and shard_rules.party_shardable(self.party_mesh,
                                                 self.easter.num_passive))
 
-    def _aggregate(self, E_all, round_idx, seeds):
+    def _aggregate(self, E_all, round_idx, seeds, lane_mask=None):
         """Shared blind+aggregate step of both engines: sharding-constrained
         (C, B, S, d) -> constrained global E. Keep BOTH loss paths on this
-        helper — they are each other's equivalence oracle."""
+        helper — they are each other's equivalence oracle.
+
+        ``lane_mask`` (B,) bool — batched serving: rows of finished (EOS)
+        request lanes are zeroed in BOTH the embeddings and the masks
+        before blinding, so a frozen lane's uplink contribution is exactly
+        0 on the wire (int32 included: quantize(0) == 0) and it leaks no
+        further embedding material after its request completed."""
         from repro import sharding as shard_hints
         E_all = shard_hints.constrain(E_all, (None, "batch", None, None))
         masks = self.masks_for(E_all.shape[1:], round_idx, seeds)
         if masks is not None:
             masks = shard_hints.constrain(masks, (None, "batch", None, None))
+        if lane_mask is not None:
+            keep = lane_mask.reshape((1, -1) + (1,) * (E_all.ndim - 2))
+            E_all = jnp.where(keep, E_all, 0)
+            if masks is not None:
+                masks = jnp.where(keep, masks, 0)
         if masks is not None and self.easter.mask_mode == "int32":
             E = aggregation.aggregate_int32(E_all, masks)
         else:
@@ -418,9 +429,12 @@ class EasterLM:
 
     # -- serving -------------------------------------------------------------
     def init_caches(self, batch: int, cache_len: int,
-                    window_override: int = -1):
+                    window_override: int = -1, per_lane: bool = False):
+        """KV caches for every party. ``per_lane=True`` gives each batch
+        row its own position counter (continuous-batching decode slots —
+        required whenever ``serve_step`` is driven with a vector pos)."""
         return [transformer.init_cache(pcfg, batch, cache_len,
-                                       window_override)
+                                       window_override, per_lane)
                 for pcfg in self.party_cfgs]
 
     def serve_tokens(self, params, tokens, caches, pos, n_steps: int,
@@ -433,7 +447,12 @@ class EasterLM:
         ``core/decode.py`` and ``decode.build_serve_tokens`` for the
         jitted, cache-donating form). The scan body is ``serve_step``
         itself, so engines and per-step blinding semantics are inherited
-        verbatim and proven bit-exact against the step-at-a-time loop."""
+        verbatim and proven bit-exact against the step-at-a-time loop.
+
+        DEPRECATED: new callers should use the typed serving surface —
+        ``core.api.build_decoder`` (ServeRequest/DecodeState) — which
+        adds request batching and EOS early-exit. This shim keeps the
+        legacy single-stream signature for one release."""
         from repro.core import decode
         return decode.serve_tokens(
             self, params, tokens, caches, pos, n_steps, seeds, key=key,
@@ -441,7 +460,8 @@ class EasterLM:
             fe_list=fe_list, return_logits=return_logits)
 
     def serve_step(self, params, tokens, caches, pos, seeds,
-                   window_override: int = -1, fe_list=None):
+                   window_override: int = -1, fe_list=None, *,
+                   lane_mask=None, nonces=None):
         """One decode step: tokens (B,1). Returns (active logits, caches).
 
         Production generation drives N of these inside a single
@@ -467,26 +487,39 @@ class EasterLM:
         the K proxies decode under one vmap (engine="vectorized") or
         K-parallel across the party mesh with in-shard blinding
         (engine="sharded"); the loop path remains the per-party oracle.
+
+        Batched serving (core/serving.py) extends the step with per-LANE
+        state: ``pos`` may be an (B,) vector (each request lane at its own
+        sequence position — caches must then be per-lane,
+        ``init_caches(per_lane=True)``); ``nonces`` (B,) switches the PRF
+        round to the per-lane ``blinding.serve_round(nonce, pos)`` schedule
+        so concurrent lanes never share a pad; ``lane_mask`` (B,) zeroes
+        finished lanes' uplink contributions (see ``_aggregate``).
         """
+        round_idx = (blinding.SERVE_DOMAIN + pos if nonces is None
+                     else blinding.serve_round(nonces, pos))
+        po = pos[:, None] if jnp.ndim(pos) == 1 else pos
         if self._passive_group_ok():
-            return self._serve_step_grouped(params, tokens, caches, pos,
-                                            seeds, window_override, fe_list)
+            return self._serve_step_grouped(params, tokens, caches, po,
+                                            seeds, window_override, fe_list,
+                                            round_idx, lane_mask)
         Es, new_caches = [], []
         for k, pcfg in enumerate(self.party_cfgs):
             fe = fe_list[k] if fe_list else {}
             E_k, nc, _ = self.local_embed(
                 params["parties"][k], pcfg, tokens, caches=caches[k],
-                pos_offset=pos, window_override=window_override, **fe)
+                pos_offset=po, window_override=window_override, **fe)
             Es.append(E_k)
             new_caches.append(nc)
-        E_all, E = self._aggregate(jnp.stack(Es),
-                                   blinding.SERVE_DOMAIN + pos, seeds)
+        E_all, E = self._aggregate(jnp.stack(Es), round_idx, seeds,
+                                   lane_mask)
         logits = self.decide(params["parties"][0], self.party_cfgs[0],
                              E.astype(E_all.dtype))
         return logits, new_caches
 
     def _passive_embed_grouped(self, params, tokens, caches, pos,
-                               window_override, fe_list, round_idx, seeds):
+                               window_override, fe_list, round_idx, seeds,
+                               lane_mask=None):
         """Shared passive-side embed of the grouped serve/prefill paths.
 
         Stacks the K passive params/caches/frontend-extras and runs ONE
@@ -523,9 +556,17 @@ class EasterLM:
         masks = self.masks_for(eshape, round_idx, seeds, mesh=mesh)
         mask_mode = self.easter.mask_mode
 
-        def body(pp, cc, f, tok, pos_, m=None):
+        def body(pp, cc, f, tok, pos_, *rest):
+            rest = list(rest)
+            m = rest.pop(0) if masks is not None else None
+            keep = rest.pop(0) if lane_mask is not None else None
             E_k, nc = embed_k(pp, cc, f, tok, pos_)
             up = blinding.blind_uplink(E_k, m, mask_mode)
+            if keep is not None:
+                # frozen request lanes ship an exactly-zero uplink
+                # (mirrors _aggregate's lane zeroing on the vmap path)
+                kb = keep.reshape((1, -1) + (1,) * (up.ndim - 2))
+                up = jnp.where(kb, up, 0)
             return jax.lax.all_gather(up, ax, axis=0, tiled=True), nc
 
         # params / caches / frontend-extras all carry the stacked K axis
@@ -534,13 +575,17 @@ class EasterLM:
         if masks is not None:
             specs.append(P(ax))
             args.append(masks)
+        if lane_mask is not None:
+            specs.append(P())
+            args.append(lane_mask)
         up_p, nc_p = shard_rules.shard_map_compat(
             body, mesh, in_specs=tuple(specs),
             out_specs=(P(), P(ax)))(*args)
         return up_p, nc_p, masks is not None
 
     def _serve_step_grouped(self, params, tokens, caches, pos, seeds,
-                            window_override, fe_list):
+                            window_override, fe_list, round_idx,
+                            lane_mask=None):
         pcfg_a = self.party_cfgs[0]
         fe_a = fe_list[0] if fe_list else {}
         E_a, nc_a, _ = self.local_embed(
@@ -548,13 +593,18 @@ class EasterLM:
             pos_offset=pos, window_override=window_override, **fe_a)
         up_p, nc_p, blinded = self._passive_embed_grouped(
             params, tokens, caches, pos, window_override, fe_list,
-            blinding.SERVE_DOMAIN + pos, seeds)
+            round_idx, seeds, lane_mask)
         if blinded is None:              # vectorized: blind in _aggregate
             E_all, E = self._aggregate(
                 jnp.concatenate([E_a[None], up_p], axis=0),
-                blinding.SERVE_DOMAIN + pos, seeds)
+                round_idx, seeds, lane_mask)
             E = E.astype(E_all.dtype)
         else:                            # sharded: uplink already blinded
+            if lane_mask is not None:
+                # match _aggregate's lane zeroing so both engines compute
+                # the identical (zero) aggregate row for frozen lanes
+                ka = lane_mask.reshape((-1,) + (1,) * (E_a.ndim - 1))
+                E_a = jnp.where(ka, E_a, 0)
             E = self._aggregate_grouped(E_a, up_p, blinded).astype(E_a.dtype)
         logits = self.decide(params["parties"][0], pcfg_a, E)
         new_caches = [nc_a] + unstack_tree(nc_p, self.easter.num_passive)

@@ -6,18 +6,21 @@ CPU example (reduced config):
 Production mesh usage mirrors the dry-run (see launch/dryrun.py); on real
 TPU hardware drop --smoke and pass --mesh data,model.
 
-Training runs through the fused scan-train engine (core/train_loop.py):
-every ``--chunk`` optimizer steps are ONE compiled program — params +
-optimizer state threaded as scan carry (and donated, so the model trains
-in place on device), the carried step index doubling as the TRAIN-domain
-PRF round counter. ``--chunk 1`` keeps the pre-scan driver (one jitted
-train-step dispatch per round) for A/B timing and as the bit-exactness
-oracle the fused path is tested against (tests/test_train_chunk.py).
+Training runs through the typed training surface (``core/api.py``):
+``build_trainer(sys, TrainConfig)`` wraps the fused scan-train engine
+(core/train_loop.py) — every ``--chunk`` optimizer steps are ONE
+compiled program with ``TrainState`` (params, optimizer state, step) as
+the single carried object, the step doubling as the TRAIN-domain PRF
+round counter. ``--chunk 1`` keeps the pre-scan driver (one jitted
+train-step dispatch per round) behind the SAME ``Trainer.run`` call, for
+A/B timing and as the bit-exactness oracle the fused path is tested
+against (tests/test_train_chunk.py).
 
 Heterogeneous per-party optimization (paper §IV-E) comes from
-``--party-optimizers``, e.g. ``0=sgd:0.01,1=adagrad:0.005`` — unlisted
-parties fall back to ``--optimizer``/``--lr``; the per-party states ride
-the same checkpoint as the params.
+``--party-optimizers``, e.g. ``0=sgd:0.01,1=adagrad:0.005`` — parsed
+into ``TrainConfig.party_optimizers``; unlisted parties fall back to
+``--optimizer``/``--lr``; the per-party states ride the same checkpoint
+as the params.
 """
 from __future__ import annotations
 
@@ -27,15 +30,13 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint, optim
 from repro.configs.base import EasterConfig, get_config, smoke_variant
-from repro.core import train_loop
+from repro.core import api
 from repro.core.easter_lm import EasterLM
 from repro.data.synthetic import lm_batch_iterator
-from repro.launch import steps as steps_mod
 
 
 def main():
@@ -102,27 +103,22 @@ def main():
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"total params (all parties): {n:,}")
 
-    if args.party_optimizers:
-        spec = optim.parse_party_spec(args.party_optimizers)
-        for _, _, hp in spec.values():
-            # listed parties clip like unlisted ones unless overridden
-            # (k=...:grad_clip=0 disables) — no silent asymmetry
-            hp.setdefault("grad_clip", 1.0)
-        opt_arg = optim.make_party_optimizers(
-            spec, sys_.C,
-            default=(args.optimizer, args.lr, {"grad_clip": 1.0}))
-        print(f"party optimizers: {opt_arg.name}")
-    else:
-        opt_arg = args.optimizer
-    train_step, opt = steps_mod.build_train_step(sys_, opt_arg, lr=args.lr)
-    opt_state = opt.init(params)
+    tcfg = api.TrainConfig(
+        optimizer=args.optimizer, lr=args.lr, chunk=args.chunk,
+        party_optimizers=(optim.parse_party_spec(args.party_optimizers)
+                          if args.party_optimizers else None))
+    trainer = api.build_trainer(sys_, tcfg)
+    if tcfg.party_optimizers:
+        print(f"party optimizers: {trainer.opt.name}")
+    state = trainer.init(params)
     start_step = 0
     if args.resume and args.ckpt and os.path.exists(args.ckpt):
-        (state, step0) = checkpoint.restore(args.ckpt,
-                                            {"params": params,
-                                             "opt": opt_state})
-        params, opt_state = state["params"], state["opt"]
+        (restored, step0) = checkpoint.restore(
+            args.ckpt, {"params": state.params, "opt": state.opt_state})
         start_step = step0 or 0
+        state = api.TrainState(restored["params"], restored["opt"],
+                               jax.numpy.asarray(start_step,
+                                                 jax.numpy.int32))
         print(f"resumed from {args.ckpt} at step {start_step}")
 
     it = lm_batch_iterator(cfg.vocab_size, args.batch, args.seq,
@@ -148,36 +144,25 @@ def main():
                 history.append({"step": i, "loss": loss,
                                 "per_party": per.tolist()})
 
-    if chunk > 1:
-        # production path: N steps per dispatch, params/opt state donated
-        # (consumed per call — rebound to the returned trees below)
-        chunk_fn = train_loop.build_train_chunk(sys_, opt)
-        i = start_step
-        while i < end:
-            n_steps = min(chunk, end - i)
-            batches = train_loop.stack_batches(
-                [next(it) for _ in range(n_steps)])
-            params, opt_state, _, metrics = chunk_fn(
-                params, opt_state, batches, jnp.asarray(i, jnp.int32))
-            log_steps(i, np.asarray(metrics["loss"]),
-                      np.asarray(metrics["per_party"]))
-            i += n_steps
-            if args.ckpt and (i // args.ckpt_every
-                              != (i - n_steps) // args.ckpt_every):
-                checkpoint.save(args.ckpt, {"params": params,
-                                            "opt": opt_state}, step=i)
-    else:
-        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
-        for i in range(start_step, end):
-            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                 jnp.asarray(i, jnp.int32))
-            log_steps(i, [metrics["loss"]], [metrics["per_party"]])
-            if args.ckpt and (i + 1) % args.ckpt_every == 0:
-                checkpoint.save(args.ckpt, {"params": params,
-                                            "opt": opt_state}, step=i + 1)
+    # ONE driver for both the fused-chunk path (chunk > 1: N steps per
+    # dispatch, TrainState donated — rebound to the returned state) and
+    # the step-at-a-time A/B oracle (chunk == 1) — Trainer.run hides the
+    # carry plumbing either way.
+    i = start_step
+    while i < end:
+        n_steps = min(chunk, end - i)
+        state, metrics = trainer.run(
+            state, [next(it) for _ in range(n_steps)])
+        log_steps(i, np.asarray(metrics["loss"]),
+                  np.asarray(metrics["per_party"]))
+        i += n_steps
+        if args.ckpt and (i // args.ckpt_every
+                          != (i - n_steps) // args.ckpt_every):
+            checkpoint.save(args.ckpt, {"params": state.params,
+                                        "opt": state.opt_state}, step=i)
     if args.ckpt:
-        checkpoint.save(args.ckpt, {"params": params, "opt": opt_state},
+        checkpoint.save(args.ckpt,
+                        {"params": state.params, "opt": state.opt_state},
                         step=end)
         print(f"checkpoint -> {args.ckpt}")
     out = {"arch": cfg.name, "history": history}

@@ -275,6 +275,9 @@ def self_attention(params: dict, x: jnp.ndarray, *, n_heads: int,
 
     cache: {"k","v": (B, T_cache, Hkv, hd), "idx": ()} — decode path writes
     the new K/V at position idx (mod T_cache for sliding windows).
+    "idx" may also be per-lane (B,) (continuous-batching decode slots,
+    core/serving.py): each batch row then writes/masks at its own
+    position, via a per-row vmap of the same slot arithmetic.
     Quantized caches (§Perf H2-it3) additionally carry "k_scale"/"v_scale"
     with int8 "k"/"v"; reads dequantize, writes quantize.
     Returns (out, new_cache).
@@ -291,9 +294,14 @@ def self_attention(params: dict, x: jnp.ndarray, *, n_heads: int,
     if cache is not None:
         T = cache["k"].shape[1]
         idx = cache["idx"]
+        per_lane = jnp.ndim(idx) == 1
         quant = "k_scale" in cache
 
         def write(buf, val, slot):
+            if jnp.ndim(slot) == 1:  # per-lane slots: one write per row
+                return jax.vmap(
+                    lambda b, vv, s: lax.dynamic_update_slice_in_dim(
+                        b, vv, s, axis=0))(buf, val, slot)
             return lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
 
         if S == 1:
@@ -317,15 +325,22 @@ def self_attention(params: dict, x: jnp.ndarray, *, n_heads: int,
                 ck = write(cache["k"], k, slot)
                 cv = write(cache["v"], v, slot)
                 new_cache = {"k": ck, "v": cv, "idx": idx + 1}
-            kv_pos_abs = _cache_positions(T, idx, window)
+            if per_lane:
+                kv_pos_abs = jax.vmap(
+                    lambda i: _cache_positions(T, i, window))(idx)  # (B,T)
+                iexp = idx[:, None]
+            else:
+                kv_pos_abs = _cache_positions(T, idx, window)  # (T,)
+                iexp = idx
             valid = kv_pos_abs >= 0
             scale = 1.0 / math.sqrt(head_dim)
             logits = _gqa_logits(q * scale, ck)  # (B,Hkv,G,1,T)
-            mask = valid & (kv_pos_abs <= idx)
+            mask = valid & (kv_pos_abs <= iexp)
             if window > 0:
-                mask &= kv_pos_abs > idx - window
-            logits = jnp.where(mask[None, None, None, None, :], logits,
-                               NEG_INF)
+                mask &= kv_pos_abs > iexp - window
+            mb = (mask[:, None, None, None, :] if per_lane
+                  else mask[None, None, None, None, :])
+            logits = jnp.where(mb, logits, NEG_INF)
             probs = jax.nn.softmax(logits, axis=-1)
             attn = _gqa_out(probs, cv).astype(x.dtype)
         else:  # prefill: write the (last T of the) prefix
@@ -340,10 +355,10 @@ def self_attention(params: dict, x: jnp.ndarray, *, n_heads: int,
                     vq, vs = quantize_kv(vw)
                     new_cache = {"k": kq, "k_scale": ks, "v": vq,
                                  "v_scale": vs,
-                                 "idx": jnp.asarray(S, jnp.int32)}
+                                 "idx": jnp.full_like(idx, S)}
                 else:
                     new_cache = {"k": kw, "v": vw,
-                                 "idx": jnp.asarray(S, jnp.int32)}
+                                 "idx": jnp.full_like(idx, S)}
             else:
                 eff = min(T, S)
                 if quant:
@@ -353,11 +368,11 @@ def self_attention(params: dict, x: jnp.ndarray, *, n_heads: int,
                                  "k_scale": write(cache["k_scale"], ks, 0),
                                  "v": write(cache["v"], vq, 0),
                                  "v_scale": write(cache["v_scale"], vs, 0),
-                                 "idx": jnp.asarray(S, jnp.int32)}
+                                 "idx": jnp.full_like(idx, S)}
                 else:
                     new_cache = {"k": write(cache["k"], k[:, -eff:], 0),
                                  "v": write(cache["v"], v[:, -eff:], 0),
-                                 "idx": jnp.asarray(S, jnp.int32)}
+                                 "idx": jnp.full_like(idx, S)}
             attn = _attend(q, k, v, causal, window, mode, q_chunk)
     else:
         attn = _attend(q, k, v, causal, window, mode, q_chunk)

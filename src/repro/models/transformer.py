@@ -141,7 +141,7 @@ def apply_block(p: Params, x: jnp.ndarray, *, cfg: ModelConfig, kind: str,
 
 
 def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
-                 window_override: int = -1):
+                 window_override: int = -1, per_lane: bool = False):
     dtype = jnp.dtype(cfg.dtype)
     if kind == "ssm":
         return ssm_mod.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
@@ -151,6 +151,11 @@ def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
     window = _layer_window(cfg, kind) if window_override < 0 else window_override
     T = min(cache_len, window) if window > 0 else cache_len
     hd = cfg.resolved_head_dim
+    # per_lane: each batch row decodes at its own position (continuous
+    # batching) — "idx" becomes (batch,) and the attention decode path
+    # switches to per-row writes/masks (layers.self_attention).
+    idx0 = (jnp.zeros((batch,), jnp.int32) if per_lane
+            else jnp.zeros((), jnp.int32))
     if cfg.kv_quant:
         return {"k": jnp.zeros((batch, T, cfg.n_kv_heads, hd), jnp.int8),
                 "k_scale": jnp.zeros((batch, T, cfg.n_kv_heads, 1),
@@ -158,20 +163,21 @@ def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
                 "v": jnp.zeros((batch, T, cfg.n_kv_heads, hd), jnp.int8),
                 "v_scale": jnp.zeros((batch, T, cfg.n_kv_heads, 1),
                                      jnp.bfloat16),
-                "idx": jnp.zeros((), jnp.int32)}
+                "idx": idx0}
     return {"k": jnp.zeros((batch, T, cfg.n_kv_heads, hd), dtype),
             "v": jnp.zeros((batch, T, cfg.n_kv_heads, hd), dtype),
-            "idx": jnp.zeros((), jnp.int32)}
+            "idx": idx0}
 
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
-               window_override: int = -1):
+               window_override: int = -1, per_lane: bool = False):
     """Stacked cache pytree mirroring stack_plan."""
     segs = []
     for kinds, reps in stack_plan(cfg):
         seg = {}
         for i, kind in enumerate(kinds):
-            one = _block_cache(cfg, kind, batch, cache_len, window_override)
+            one = _block_cache(cfg, kind, batch, cache_len, window_override,
+                               per_lane)
             seg[f"p{i}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy() if reps > 1
                 else a[None], one)

@@ -19,7 +19,7 @@ _spec.loader.exec_module(cmp_mod)
 
 
 def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
-         decode_ms=5.0, train_ms=20.0):
+         decode_ms=5.0, train_ms=20.0, serve_ms=6.0, serve_p99=400.0):
     rows = [{"C": c, "engine": "vectorized", "batch": 32,
              "use_kernel": False, "fused_masks": False,
              "round_ms": round_ms, "mask_ms": mask_ms,
@@ -35,6 +35,15 @@ def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
                      "train_ms_per_step": train_ms,
                      "train_tokens_per_s": 2 * 8 * 1e3 / train_ms,
                      "step_loop_ms_per_step": train_ms * 1.2})
+    if serve_ms is not None:
+        rows.append({"kind": "serve", "C": 4, "engine": "vectorized",
+                     "lanes": 8, "requests": 16, "prompt": 8, "gen": 8,
+                     "chunk": 4, "tokens": 80,
+                     "serve_ms_per_tok": serve_ms,
+                     "agg_tokens_per_s": 1e3 / serve_ms,
+                     "serve_p50_ms": serve_p99 * 0.7,
+                     "serve_p99_ms": serve_p99,
+                     "rounds": 17, "chunks": 5})
     return {
         "schema": cmp_mod.SCHEMA,
         "calibration_ms": cal,
@@ -44,6 +53,9 @@ def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
                    "decode": {"gen": 16, "batch": 2, "prompt": 8,
                               "arch": "qwen2.5-3b"},
                    "train": {"chunk": 4, "batch": 2, "seq": 8,
+                             "arch": "qwen2.5-3b"},
+                   "serve": {"requests": 16, "lanes": 8, "prompt": 8,
+                             "gen": 8, "chunk": 4,
                              "arch": "qwen2.5-3b"}},
         "rows": rows,
     }
@@ -54,7 +66,8 @@ def test_identical_docs_pass():
     table, failures = cmp_mod.compare(base, copy.deepcopy(base), 1.5)
     assert not failures
     # 2 sweep rows x (round, mask, bytes) + decode ms/tok + train ms/step
-    assert len(table) == 2 * 3 + 1 + 1
+    # + serve row x (ms/tok, p99)
+    assert len(table) == 2 * 3 + 1 + 1 + 2
     assert all(r["ok"] for r in table)
 
 
@@ -102,6 +115,31 @@ def test_train_row_regression_fails():
 def test_train_row_missing_is_lost_coverage():
     _, failures = cmp_mod.compare(_doc(), _doc(train_ms=None), 1.5)
     assert any("train" in f and "missing" in f for f in failures)
+
+
+def test_serve_row_regression_fails():
+    """The continuous-batching serve-tier row gates BOTH its throughput
+    (serve_ms_per_tok) and its tail latency (serve_p99_ms); the p50 and
+    aggregate-tokens/s columns are informational."""
+    _, failures = cmp_mod.compare(_doc(serve_ms=6.0), _doc(serve_ms=10.0),
+                                  1.5)
+    assert any("serve_ms_per_tok" in f for f in failures)
+    _, failures = cmp_mod.compare(_doc(serve_p99=400.0),
+                                  _doc(serve_p99=700.0), 1.5)
+    assert any("serve_p99_ms" in f for f in failures)
+    _, failures = cmp_mod.compare(_doc(serve_ms=6.0, serve_p99=400.0),
+                                  _doc(serve_ms=8.0, serve_p99=500.0), 1.5)
+    assert not failures
+    loose_p50 = _doc()
+    loose_p50["rows"][-1]["serve_p50_ms"] = 1e6
+    loose_p50["rows"][-1]["agg_tokens_per_s"] = 1e-6
+    _, failures = cmp_mod.compare(_doc(), loose_p50, 1.5)
+    assert not failures
+
+
+def test_serve_row_missing_is_lost_coverage():
+    _, failures = cmp_mod.compare(_doc(), _doc(serve_ms=None), 1.5)
+    assert any("serve" in f and "missing" in f for f in failures)
 
 
 def test_regression_over_threshold_fails():
@@ -205,6 +243,7 @@ def test_committed_baseline_is_valid():
     sweep = [r for r in doc["rows"] if "kind" not in r]
     dec = [r for r in doc["rows"] if r.get("kind") == "decode"]
     trn = [r for r in doc["rows"] if r.get("kind") == "train"]
+    srv = [r for r in doc["rows"] if r.get("kind") == "serve"]
     assert {r["C"] for r in sweep} == {4, 16, 64}
     for r in sweep:
         for m in ("round_ms", "mask_ms", "bytes_per_round"):
@@ -218,6 +257,11 @@ def test_committed_baseline_is_valid():
     for r in trn:
         assert r["train_ms_per_step"] > 0 and r["cal_ms"] > 0
         assert r["step_loop_ms_per_step"] > 0
+    # ... and the continuous-batching serve-tier row
+    assert srv, "baseline lost the serve-tier stream row"
+    for r in srv:
+        assert r["serve_ms_per_tok"] > 0 and r["serve_p99_ms"] > 0
+        assert r["cal_ms"] > 0
     # and the gate passes against itself
     table, failures = cmp_mod.compare(doc, copy.deepcopy(doc), 1.5)
     assert not failures and table

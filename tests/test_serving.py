@@ -1,0 +1,550 @@
+"""The serving tier: lane-batched decode + continuous batching.
+
+Covers the typed serving surface (core/api.py: ServeRequest /
+DecodeConfig / build_decoder), the fused early-exit lane decoder
+(core/decode.decode_chunk), the continuous-batching scheduler
+(core/serving.ServingEngine) and the training-side mirror
+(api.build_trainer):
+
+  * batched-decode parity — R concurrent lanes decode bit-identically
+    to the SAME engine serving one request at a time (other lanes
+    idle), for every party engine x wire format x fresh_masks. This is
+    the serve tier's correctness oracle: lane content must never leak
+    across lanes, and per-lane PRF nonces must reproduce the
+    single-stream mask schedule exactly. (The R-lane one-live-lane
+    oracle — not a B=1 run — because XLA lowers matmuls differently
+    per batch shape; rows are content-independent at FIXED shape.)
+  * PRF round audit — per-request serve/prefill rounds are pairwise
+    disjoint across the whole stream and can never collide with the
+    TRAIN domain (blinding.serve_round layout).
+  * frozen lanes — a done lane's blinded uplink is exactly zero (both
+    the embedding row and the mask row are zeroed before blinding), its
+    cache row stops mutating, and its output is pad.
+  * EOS early-exit — the fused chunk cuts off before chunk length once
+    every lane is done.
+  * ServingEngine end-to-end — mixed-length requests through
+    admission / prefill-into-slot / harvest / refill match one-at-a-time
+    service token-for-token.
+  * sample_token — one shared sampling path: legacy scalar behavior,
+    per-lane temperature mixing greedy + sampled lanes, done masking.
+  * deprecation shims + build_trainer parity with the hand-assembled
+    fused train chunk.
+"""
+import os
+
+import numpy as np
+import pytest
+
+# the sharded-engine cases need >1 host device; harmless if already set
+N_DEV = 4
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={N_DEV}"
+
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro import optim                                      # noqa: E402
+from repro.configs.base import (EasterConfig, get_config,    # noqa: E402
+                                smoke_variant)
+from repro.core import (aggregation, api, blinding, decode,  # noqa: E402
+                        serving, train_loop)
+from repro.core.easter_lm import EasterLM                    # noqa: E402
+
+R = 3                   # decode lanes
+P = 5                   # prompt length (parity suite: one bucket)
+MAX_LEN = 12
+CHUNK = 3
+D_EMBED = 64
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < N_DEV,
+    reason="requires multi-device host (XLA_FLAGS set after jax init)")
+
+ENGINES = ["loop", "vectorized", pytest.param("sharded", marks=needs_mesh)]
+
+
+def _lm(engine, mask_mode="float", fresh_masks=True):
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    # num_passive=4 divides the 4-way party axis, so engine="sharded"
+    # actually shards (and engine parity is not vacuous)
+    e = EasterConfig(num_passive=4, d_embed=D_EMBED, decision_layers=1,
+                     mask_mode=mask_mode, fresh_masks=fresh_masks)
+    return EasterLM(cfg=cfg, easter=e, engine=engine)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Params + prompt pool shared by every cell — init_params is
+    independent of engine and mask_mode."""
+    sys_ = _lm("vectorized")
+    params = sys_.init_params(jax.random.PRNGKey(0))
+    pool = jax.random.randint(jax.random.PRNGKey(1), (8, MAX_LEN), 0,
+                              sys_.cfg.vocab_size)
+    return params, np.asarray(pool)
+
+
+def _requests(pool, n=R, plen=P, budgets=(2, 4, 3), temperature=0.0,
+              eos=-1):
+    return [api.ServeRequest(tokens=tuple(pool[i, :plen].tolist()),
+                             max_new_tokens=budgets[i % len(budgets)],
+                             eos_id=eos, temperature=temperature)
+            for i in range(n)]
+
+
+def _drain(decode_fn, params, state):
+    """Run decode chunks until every lane is done; collect per-lane
+    emissions (the first rem_before - rem_after columns per chunk)."""
+    toks = {lane: [] for lane in range(state.done.shape[0])}
+    while not bool(np.asarray(state.done).all()):
+        rem0 = np.asarray(state.remaining)
+        buf, state, _ = decode_fn(params, state)
+        rem1 = np.asarray(state.remaining)
+        buf = np.asarray(buf)
+        for lane in toks:
+            toks[lane].extend(int(x) for x in
+                              buf[lane, :rem0[lane] - rem1[lane]])
+    return toks, state
+
+
+# ---------------------------------------------------------------------------
+# tentpole parity: R concurrent lanes == one-live-lane single streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("mask_mode", ["float", "int32"])
+@pytest.mark.parametrize("fresh_masks", [True, False])
+def test_batched_matches_single_stream(setup, engine, mask_mode,
+                                       fresh_masks):
+    params, pool = setup
+    sys_ = _lm(engine, mask_mode, fresh_masks)
+    cfg = api.DecodeConfig(lanes=R, max_len=MAX_LEN, chunk=CHUNK,
+                           donate=False)
+    prefill_fn, decode_fn = api.build_decoder(sys_, cfg)
+    reqs = _requests(pool)
+
+    st = api.init_decode_state(sys_, cfg)
+    for lane, req in enumerate(reqs):
+        st = prefill_fn(params, st, req, lane, nonce=lane)
+    batched, st = _drain(decode_fn, params, st)
+
+    for lane, req in enumerate(reqs):
+        st1 = api.init_decode_state(sys_, cfg)
+        st1 = prefill_fn(params, st1, req, lane, nonce=lane)
+        single, _ = _drain(decode_fn, params, st1)
+        assert single[lane] == batched[lane], \
+            f"lane {lane} diverges from its single-stream oracle"
+        assert len(batched[lane]) == req.max_new_tokens
+        for other in range(R):          # idle lanes emit nothing
+            if other != lane:
+                assert single[other] == []
+
+
+def test_batched_matches_single_stream_sampled(setup):
+    """Per-lane sampling keys (fold_in(base, nonce), split per step) are
+    lane-local: a sampled lane draws the same tokens alone or batched."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    cfg = api.DecodeConfig(lanes=R, max_len=MAX_LEN, chunk=CHUNK,
+                           donate=False)
+    prefill_fn, decode_fn = api.build_decoder(sys_, cfg)
+    reqs = _requests(pool, temperature=0.7)
+    st = api.init_decode_state(sys_, cfg)
+    for lane, req in enumerate(reqs):
+        st = prefill_fn(params, st, req, lane, nonce=lane)
+    batched, _ = _drain(decode_fn, params, st)
+    for lane, req in enumerate(reqs):
+        st1 = api.init_decode_state(sys_, cfg)
+        st1 = prefill_fn(params, st1, req, lane, nonce=lane)
+        single, _ = _drain(decode_fn, params, st1)
+        assert single[lane] == batched[lane]
+
+
+# ---------------------------------------------------------------------------
+# PRF round audit: pairwise-disjoint serve/prefill rounds, never TRAIN
+# ---------------------------------------------------------------------------
+
+
+def test_serve_round_layout():
+    """The nonce schedule's static layout: SERVE < PREFILL, stride spans
+    the whole position space, and the max nonce still fits under the
+    prefill domain."""
+    assert blinding.SERVE_DOMAIN < blinding.PREFILL_DOMAIN
+    top = int(blinding.serve_round(blinding.MAX_SERVE_NONCE,
+                                   blinding.SERVE_NONCE_STRIDE - 1))
+    assert top < blinding.PREFILL_DOMAIN
+    assert int(blinding.serve_round(0, 0)) == blinding.SERVE_DOMAIN
+    # vectorized per-lane form == scalar form
+    lanes = blinding.serve_round(jnp.asarray([0, 3, 7]), 4)
+    np.testing.assert_array_equal(
+        np.asarray(lanes),
+        [int(blinding.serve_round(n, 4)) for n in (0, 3, 7)])
+
+
+def test_stream_rounds_pairwise_disjoint(setup):
+    """Transcript audit over a real ServingEngine run: reconstruct every
+    PRF round each request consumed (prefill + one serve round per
+    decoded token at its positions) and require the per-request sets to
+    be pairwise disjoint and outside the TRAIN domain — two requests
+    sharing a pad round would let the aggregator difference them."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    eng = serving.ServingEngine(sys_, params, lanes=2, max_len=MAX_LEN,
+                                chunk=CHUNK, donate=False)
+    reqs = _requests(pool, n=5, budgets=(2, 4, 3, 1, 4))
+    comps = eng.run(reqs)
+    assert len(comps) == 5
+    assert sorted(c.nonce for c in comps) == list(range(5))
+    rounds = {}
+    for c in comps:
+        p = len(c.request.tokens)
+        start = p - 1                       # first decode input position
+        rounds[c.nonce] = (
+            {int(blinding.PREFILL_DOMAIN + c.nonce)}
+            | {int(blinding.serve_round(c.nonce, start + i))
+               for i in range(len(c.tokens))})
+    all_rounds = [r for s in rounds.values() for r in s]
+    assert len(all_rounds) == len(set(all_rounds)), \
+        "two in-flight requests shared a PRF round"
+    assert min(all_rounds) >= blinding.SERVE_DOMAIN, \
+        "a serve round collided with the TRAIN domain"
+
+
+# ---------------------------------------------------------------------------
+# frozen lanes: zero uplink, frozen cache, pad output
+# ---------------------------------------------------------------------------
+
+
+def test_frozen_lane_uplink_is_zero(setup, monkeypatch):
+    """Spy on the aggregation the serve round ACTUALLY runs: with a lane
+    masked out, both its embedding row and its mask row reach the
+    blinder as exact zeros — the frozen lane contributes nothing to the
+    blinded uplink (output parity alone can't prove this; pairwise
+    masks cancel in the aggregate)."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    caches = sys_.init_caches(R, MAX_LEN, per_lane=True)
+    captured = []
+    orig = aggregation.blind_and_aggregate
+
+    def spy(E_all, masks, **kw):
+        captured.append((np.asarray(E_all),
+                         None if masks is None else np.asarray(masks)))
+        return orig(E_all, masks, **kw)
+
+    monkeypatch.setattr(aggregation, "blind_and_aggregate", spy)
+    tok = jnp.asarray(pool[:R, :1], jnp.int32)
+    lane_mask = jnp.asarray([True, False, True])
+    nonces = jnp.arange(R, dtype=jnp.int32)
+    pos = jnp.zeros((R,), jnp.int32)
+    sys_.serve_step(params, tok, caches, pos, seeds,
+                    lane_mask=lane_mask, nonces=nonces)
+    assert captured, "serve_step did not reach blind_and_aggregate"
+    for E_all, masks in captured:
+        assert not np.any(E_all[:, 1]), "frozen lane embeds nonzero"
+        assert np.any(E_all[:, 0]) and np.any(E_all[:, 2])
+        if masks is not None:
+            assert not np.any(masks[:, 1]), "frozen lane mask nonzero"
+
+
+def test_frozen_lane_cache_and_output(setup):
+    """After a lane exhausts its budget mid-chunk it emits pad ids and
+    its cache row stays bit-frozen while other lanes keep decoding."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    cfg = api.DecodeConfig(lanes=R, max_len=MAX_LEN, chunk=4,
+                           donate=False)
+    prefill_fn, decode_fn = api.build_decoder(sys_, cfg)
+    reqs = _requests(pool, budgets=(4, 1, 4))   # lane 1 dies at step 1
+    st = api.init_decode_state(sys_, cfg)
+    for lane, req in enumerate(reqs):
+        st = prefill_fn(params, st, req, lane, nonce=lane)
+    frozen_before = [np.asarray(leaf)[:, 1].copy()
+                     for leaf in jax.tree.leaves(st.caches)
+                     if np.asarray(leaf).ndim >= 2]
+    buf, st, steps = decode_fn(params, st)
+    buf = np.asarray(buf)
+    assert int(steps) == 4
+    assert bool(np.asarray(st.done)[1])
+    assert not np.any(buf[1, 1:]), "frozen lane emitted non-pad tokens"
+    frozen_after = [np.asarray(leaf)[:, 1]
+                    for leaf in jax.tree.leaves(st.caches)
+                    if np.asarray(leaf).ndim >= 2]
+    changed = sum(not np.array_equal(a, b)
+                  for a, b in zip(frozen_before, frozen_after))
+    # the lane wrote its ONE budgeted token (step 0), then froze: only
+    # that single step-0 write distinguishes before/after — re-running a
+    # single-step decode reproduces it exactly
+    st2 = api.init_decode_state(sys_, cfg)
+    st2 = prefill_fn(params, st2, reqs[1], 1, nonce=1)
+    _, st2, _ = decode_fn(params, st2)
+    want = [np.asarray(leaf)[:, 1]
+            for leaf in jax.tree.leaves(st2.caches)
+            if np.asarray(leaf).ndim >= 2]
+    for a, b in zip(frozen_after, want):
+        np.testing.assert_array_equal(a, b)
+    assert changed > 0      # the step-0 write did land before freezing
+
+
+def test_early_exit_cuts_off_dispatch(setup):
+    """steps_run < chunk once every lane is done: the while_loop form
+    pays for rounds actually decoded, not for the chunk length."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    cfg = api.DecodeConfig(lanes=R, max_len=MAX_LEN, chunk=4,
+                           donate=False)
+    prefill_fn, decode_fn = api.build_decoder(sys_, cfg)
+    st = api.init_decode_state(sys_, cfg)
+    st = prefill_fn(params, st,
+                    _requests(pool, n=1, budgets=(2,))[0], 0, nonce=0)
+    buf, st, steps = decode_fn(params, st)
+    assert int(steps) == 2 < cfg.chunk
+    assert bool(np.asarray(st.done).all())
+    assert not np.any(np.asarray(buf)[:, 2:])
+
+
+def test_eos_freezes_lane(setup):
+    """A request whose eos_id equals its first greedy token stops after
+    exactly that token (budget untouched beyond it)."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    cfg = api.DecodeConfig(lanes=R, max_len=MAX_LEN, chunk=4,
+                           donate=False)
+    prefill_fn, decode_fn = api.build_decoder(sys_, cfg)
+    st = api.init_decode_state(sys_, cfg)
+    probe = _requests(pool, n=1, budgets=(4,))[0]
+    st = prefill_fn(params, st, probe, 0, nonce=0)
+    buf, _, _ = decode_fn(params, st)
+    first = int(np.asarray(buf)[0, 0])
+    req = api.ServeRequest(tokens=probe.tokens, max_new_tokens=4,
+                           eos_id=first)
+    st = api.init_decode_state(sys_, cfg)
+    st = prefill_fn(params, st, req, 0, nonce=0)
+    buf, st, steps = decode_fn(params, st)
+    assert int(steps) == 1
+    assert np.asarray(buf)[0].tolist() == [first, 0, 0, 0]
+    assert bool(np.asarray(st.done)[0])
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine end-to-end: continuous batching == one-at-a-time service
+# ---------------------------------------------------------------------------
+
+
+def test_serving_engine_matches_sequential(setup):
+    """5 mixed-length requests through 2 lanes (slot reuse + mid-flight
+    refill) produce token-for-token what one-at-a-time service produces
+    — continuous batching changes latency, never content."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    eng = serving.ServingEngine(sys_, params, lanes=2, max_len=MAX_LEN,
+                                chunk=CHUNK, donate=False)
+    reqs = [api.ServeRequest(tokens=tuple(pool[i, :4 + (i % 2)].tolist()),
+                             max_new_tokens=(2, 4, 3, 1, 4)[i])
+            for i in range(5)]
+    comps = eng.run(list(reqs))
+    batched = {c.nonce: c.tokens for c in comps}
+    assert len(batched) == 5
+    assert {c.lane for c in comps} == {0, 1}    # both slots saw traffic
+    eng.reset()
+    for req in reqs:
+        eng.run([req])
+    sequential = {c.nonce: c.tokens for c in eng.completions}
+    assert batched == sequential
+    for i, req in enumerate(reqs):
+        assert len(batched[i]) == req.max_new_tokens
+
+
+def test_serving_engine_nonce_exhaustion(setup):
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    eng = serving.ServingEngine(sys_, params, lanes=1, max_len=MAX_LEN)
+    eng._next_nonce = blinding.MAX_SERVE_NONCE + 1
+    eng.submit(_requests(pool, n=1)[0])
+    with pytest.raises(RuntimeError, match="nonce space exhausted"):
+        eng.step()
+
+
+# ---------------------------------------------------------------------------
+# sample_token: one shared sampling path
+# ---------------------------------------------------------------------------
+
+
+def test_sample_token_scalar_legacy():
+    """Python-float temperature keeps the legacy single-stream numerics
+    (argmax / plain categorical) bit-exactly."""
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(jax.random.PRNGKey(4), (4, 17))
+    np.testing.assert_array_equal(
+        np.asarray(decode.sample_token(logits, key, 0.0)),
+        np.asarray(jnp.argmax(logits, -1)[:, None]))
+    np.testing.assert_array_equal(
+        np.asarray(decode.sample_token(logits, key, 0.7)),
+        np.asarray(jax.random.categorical(key, logits / 0.7)[:, None]))
+
+
+def test_sample_token_per_lane_temperature():
+    """Array temperature mixes greedy and sampled lanes in ONE call:
+    each lane matches its own scalar reference."""
+    logits = jax.random.normal(jax.random.PRNGKey(5), (3, 17))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3, dtype=jnp.uint32))
+    temp = jnp.asarray([0.0, 0.7, 1.3])
+    got = np.asarray(decode.sample_token(logits, keys, temp))
+    assert got[0, 0] == int(jnp.argmax(logits[0]))
+    for lane in (1, 2):
+        want = jax.random.categorical(keys[lane],
+                                      logits[lane] / temp[lane])
+        assert got[lane, 0] == int(want)
+
+
+def test_sample_token_done_masking():
+    logits = jax.random.normal(jax.random.PRNGKey(6), (3, 17))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3, dtype=jnp.uint32))
+    done = jnp.asarray([False, True, False])
+    got = np.asarray(decode.sample_token(logits, keys,
+                                         jnp.zeros((3,)), done=done,
+                                         pad_id=9))
+    assert got[1, 0] == 9
+    assert got[0, 0] == int(jnp.argmax(logits[0]))
+    assert got[2, 0] == int(jnp.argmax(logits[2]))
+
+
+# ---------------------------------------------------------------------------
+# API hygiene: validation + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_request_validation(setup):
+    with pytest.raises(ValueError, match=">= 2 prompt tokens"):
+        api.ServeRequest(tokens=(1,), max_new_tokens=2)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        api.ServeRequest(tokens=(1, 2), max_new_tokens=0)
+    with pytest.raises(ValueError, match="nonce"):
+        api.ServeRequest(tokens=(1, 2), max_new_tokens=1,
+                         nonce=blinding.MAX_SERVE_NONCE + 1)
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    cfg = api.DecodeConfig(lanes=R, max_len=MAX_LEN, chunk=CHUNK)
+    prefill_fn, _ = api.build_decoder(sys_, cfg)
+    st = api.init_decode_state(sys_, cfg)
+    with pytest.raises(ValueError, match="no nonce"):
+        prefill_fn(params, st, _requests(pool, n=1)[0], 0)
+    with pytest.raises(ValueError, match="exceeds the lane KV slot"):
+        prefill_fn(params, st,
+                   api.ServeRequest(tokens=tuple(range(MAX_LEN + 1)),
+                                    max_new_tokens=1),
+                   0, nonce=0)
+
+
+def test_budget_capped_to_slot(setup):
+    """A request asking past the KV slot is silently capped: the lane
+    never writes beyond max_len."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    cfg = api.DecodeConfig(lanes=R, max_len=P + 2, chunk=CHUNK,
+                           donate=False)
+    prefill_fn, decode_fn = api.build_decoder(sys_, cfg)
+    st = api.init_decode_state(sys_, cfg)
+    req = api.ServeRequest(tokens=tuple(pool[0, :P].tolist()),
+                           max_new_tokens=50)
+    st = prefill_fn(params, st, req, 0, nonce=0)
+    assert int(np.asarray(st.remaining)[0]) == 3    # max_len - P + 1
+    toks, st = _drain(decode_fn, params, st)
+    assert len(toks[0]) == 3
+    assert int(np.asarray(st.pos)[0]) == P + 2      # never past the slot
+
+
+def test_deprecated_shims_warn(setup):
+    """The legacy positional entry points still work — behind a
+    DeprecationWarning — for one release (tools/check_deprecated.py
+    lints in-tree callers)."""
+    params, pool = setup
+    sys_ = _lm("vectorized")
+    seeds = sys_.mask_seeds()
+    toks = jnp.asarray(pool[:2, :P], jnp.int32)
+    caches = sys_.init_caches(2, P + 2)
+    _, caches = sys_.prefill(params, toks[:, :-1], caches, seeds=seeds,
+                             round_idx=0)
+    with pytest.warns(DeprecationWarning, match="build_decoder"):
+        out, *_ = sys_.serve_tokens(params, toks[:, -1:], caches,
+                                    P - 1, 2, seeds)
+    assert np.asarray(out).shape == (2, 2)
+    with pytest.warns(DeprecationWarning, match="build_decoder"):
+        decode.build_serve_tokens(sys_, 2)
+
+
+# ---------------------------------------------------------------------------
+# training mirror: build_trainer == hand-assembled fused chunk
+# ---------------------------------------------------------------------------
+
+
+def _train_batches(sys_, n, batch=2, seq=6, seed=2):
+    toks = jax.random.randint(jax.random.PRNGKey(seed),
+                              (n, batch, seq + 1), 0,
+                              sys_.cfg.vocab_size)
+    return [{"tokens": toks[i, :, :-1], "labels": toks[i, :, 1:]}
+            for i in range(n)]
+
+
+def test_build_trainer_matches_hand_assembled(setup):
+    """Trainer.run == the launcher's old hand-assembled carry plumbing
+    (same optimizer, same fused chunk) — bit-exact params and losses."""
+    params, _ = setup
+    sys_ = _lm("vectorized")
+    batches = _train_batches(sys_, 4)
+    trainer = api.build_trainer(sys_, api.TrainConfig(chunk=4,
+                                                      donate=False))
+    state = trainer.init(params)
+    assert int(np.asarray(state.step)) == 0
+    state, metrics = trainer.run(state, batches)
+    assert int(np.asarray(state.step)) == 4
+
+    opt = optim.make_optimizer("adam", 1e-3, grad_clip=1.0)
+    fn = train_loop.build_train_chunk(sys_, opt, donate=False)
+    p_ref, _, step_ref, m_ref = fn(params, opt.init(params),
+                                   train_loop.stack_batches(batches),
+                                   jnp.zeros((), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(metrics["loss"]),
+                                  np.asarray(m_ref["loss"]))
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(p_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(np.asarray(step_ref)) == 4
+
+
+def test_trainer_step_loop_matches_chunk(setup):
+    """chunk=1 (the A/B oracle driver) and chunk=N behind the SAME
+    Trainer.run produce identical losses."""
+    params, _ = setup
+    sys_ = _lm("vectorized")
+    batches = _train_batches(sys_, 3)
+    t_chunk = api.build_trainer(sys_, api.TrainConfig(chunk=3,
+                                                      donate=False))
+    s1, m1 = t_chunk.run(t_chunk.init(params), batches)
+    t_step = api.build_trainer(sys_, api.TrainConfig(chunk=1,
+                                                     donate=False))
+    s2, m2 = t_step.run(t_step.init(params), batches)
+    np.testing.assert_allclose(np.asarray(m1["loss"]),
+                               np.asarray(m2["loss"]), rtol=2e-5)
+    assert int(np.asarray(s1.step)) == int(np.asarray(s2.step)) == 3
+
+
+def test_trainer_party_optimizer_spec(setup):
+    """parse_party_spec output rides TrainConfig: heterogeneous per-party
+    states come out of one Trainer.run and the loss moves."""
+    params, _ = setup
+    sys_ = _lm("vectorized")
+    spec = optim.parse_party_spec("0=sgd:0.01,1=adagrad:0.005")
+    trainer = api.build_trainer(
+        sys_, api.TrainConfig(chunk=2, party_optimizers=spec,
+                              donate=False))
+    state = trainer.init(params)
+    batches = _train_batches(sys_, 2)
+    state, metrics = trainer.run(state, batches)
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+    assert int(np.asarray(state.step)) == 2
+    changed = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(jax.tree.leaves(params),
+                                  jax.tree.leaves(state.params)))
+    assert changed

@@ -1,0 +1,86 @@
+"""Deprecation lint for the serving-surface migration. Stdlib only.
+
+The PR that introduced the typed serving API (``core/api.py``:
+``ServeRequest`` / ``build_decoder`` / ``build_trainer``) kept the old
+positional decode entry points — ``decode.serve_tokens``,
+``decode.build_serve_tokens`` and the ``EasterLM.serve_tokens`` method —
+alive for ONE release behind ``DeprecationWarning`` shims. This lint
+keeps the grace period honest: the shims exist for out-of-tree callers,
+so any NEW in-tree caller fails CI here instead of quietly re-rooting on
+the old surface.
+
+Scans ``src/``, ``benchmarks/`` and ``examples/`` for call sites of the
+deprecated names. Allowlisted: the modules that DEFINE the shims
+(core/decode.py, core/easter_lm.py) and the typed surface built on the
+underlying engine (core/api.py). ``tests/`` is exempt wholesale — the
+shim-warning tests must keep calling the old names on purpose.
+
+Usage:
+    python tools/check_deprecated.py            # lint the repo
+Exit 1 with one ``path:line: matched-name`` line per violation.
+
+Run by the ``tier1`` CI job (.github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# call sites of the deprecated serving surface: the old fused-decode
+# builders and the EasterLM method alias. Matched syntactically on the
+# call spelling — cheap, zero-dependency, and exactly what "a new caller
+# crept in" looks like in review.
+PATTERNS = (
+    re.compile(r"\bbuild_serve_tokens\s*\("),
+    re.compile(r"\.serve_tokens\s*\("),
+)
+SCAN_DIRS = ("src", "benchmarks", "examples")
+# definition sites + the typed surface that wraps the underlying engine
+ALLOW = {
+    os.path.join("src", "repro", "core", "decode.py"),
+    os.path.join("src", "repro", "core", "easter_lm.py"),
+    os.path.join("src", "repro", "core", "api.py"),
+}
+
+
+def lint(root: str) -> list[str]:
+    bad: list[str] = []
+    for d in SCAN_DIRS:
+        for dirpath, _, names in os.walk(os.path.join(root, d)):
+            for name in sorted(names):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, root)
+                if rel in ALLOW:
+                    continue
+                with open(path, encoding="utf-8") as f:
+                    for i, line in enumerate(f, 1):
+                        for pat in PATTERNS:
+                            m = pat.search(line)
+                            if m:
+                                bad.append(f"{rel}:{i}: deprecated call "
+                                           f"{m.group(0).rstrip('(').strip()}"
+                                           f"(...) — use core.api."
+                                           f"build_decoder (see "
+                                           f"docs/ARCHITECTURE.md, "
+                                           f"serving tier)")
+    return bad
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bad = lint(root)
+    for line in bad:
+        print(line)
+    if bad:
+        print(f"{len(bad)} deprecated serving-surface call site(s)",
+              file=sys.stderr)
+        return 1
+    print("no deprecated serving-surface call sites")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
