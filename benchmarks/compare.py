@@ -14,6 +14,13 @@ the
 deterministic wire-bytes accounting grows, or when a baseline row
 vanished from the sweep (lost coverage is a regression too).
 
+Rows are keyed by wire format too (``wire: float|int32|int8`` — the
+narrow-ring sweep), and the gate additionally enforces the compression
+DIRECTION: wherever the new sweep carries both a float and an int8 row
+for the same cell, the int8 ``bytes_per_round`` must be STRICTLY below
+the float one — narrow-ring compression that stops paying is a
+regression even when no timing moved.
+
 Timings are normalized by each document's ``calibration_ms`` (a fixed
 jitted-matmul probe recorded at sweep time), so a baseline captured on
 this repo's dev container gates meaningfully on a slower/faster CI
@@ -60,9 +67,11 @@ def load(path: str) -> dict:
 
 def row_key(r: dict) -> Tuple:
     # kindless rows are the per-C protocol-round sweep; kind="train" /
-    # kind="decode" are the LLM-scale fused-engine rows
+    # kind="decode" are the LLM-scale fused-engine rows; wire splits the
+    # narrow-ring sweep into its own gated cells
     return (r.get("kind", ""), r["C"], r["engine"],
-            r.get("use_kernel", False), r.get("fused_masks", False))
+            r.get("use_kernel", False), r.get("fused_masks", False),
+            r.get("wire", ""))
 
 
 def compare(base: dict, new: dict, threshold: float
@@ -115,13 +124,42 @@ def compare(base: dict, new: dict, threshold: float
                 ratio = min(raw, adj)
                 ok = ratio <= threshold
             table.append({"C": br["C"], "engine": br["engine"],
+                          "wire": br.get("wire", ""),
                           "metric": metric, "baseline": b, "new": n,
                           "ratio": ratio, "ok": ok})
             if not ok:
+                wt = f" wire={br['wire']}" if br.get("wire") else ""
                 failures.append(
-                    f"C={br['C']} engine={br['engine']} {metric}: "
+                    f"C={br['C']} engine={br['engine']}{wt} {metric}: "
                     f"{b:.3g} -> {n:.3g} (normalized ratio {ratio:.2f}x "
                     f"> {threshold if metric != 'bytes_per_round' else BYTES_TOL}x)")
+    # wire-compression direction gate: wherever the NEW sweep carries both
+    # a float and an int8 row for the same cell, the int8 row's
+    # deterministic bytes accounting must be STRICTLY below float — a
+    # narrow ring whose wire stopped shrinking is a packing/accounting
+    # regression even when no timing moved
+    by_cell: Dict[Tuple, Dict[str, float]] = {}
+    for r in new["rows"]:
+        if "bytes_per_round" in r and r.get("wire"):
+            cell = (r.get("kind", ""), r["C"], r["engine"],
+                    r.get("use_kernel", False))
+            by_cell.setdefault(cell, {})[r["wire"]] = \
+                float(r["bytes_per_round"])
+    for cell in sorted(by_cell):
+        by_wire = by_cell[cell]
+        if "float" not in by_wire or "int8" not in by_wire:
+            continue
+        f_b, q_b = by_wire["float"], by_wire["int8"]
+        ok = q_b < f_b
+        table.append({"C": cell[1], "engine": cell[2],
+                      "wire": "int8<float", "metric": "bytes_per_round",
+                      "baseline": f_b, "new": q_b,
+                      "ratio": (q_b / f_b) if f_b else 1.0, "ok": ok})
+        if not ok:
+            failures.append(
+                f"C={cell[1]} engine={cell[2]}: int8 wire bytes_per_round "
+                f"{q_b:.0f} is not strictly below float {f_b:.0f} — "
+                f"narrow-ring compression stopped paying")
     return table, failures
 
 
@@ -134,12 +172,13 @@ def markdown(table: List[dict], base: dict, new: dict,
            f"threshold: **{threshold}x** (calibration-normalized; "
            f"baseline cal {cal_b:.3f} ms, this run {cal_n:.3f} ms)",
            "",
-           "| C | engine | metric | baseline | new | ratio | |",
-           "|---:|---|---|---:|---:|---:|---|"]
+           "| C | engine | wire | metric | baseline | new | ratio | |",
+           "|---:|---|---|---|---:|---:|---:|---|"]
     for r in table:
         fmt = (lambda v: f"{v:,.0f}") if r["metric"] == "bytes_per_round" \
             else (lambda v: f"{v:.2f}")
-        out.append(f"| {r['C']} | {r['engine']} | {r['metric']} | "
+        out.append(f"| {r['C']} | {r['engine']} | {r.get('wire', '')} | "
+                   f"{r['metric']} | "
                    f"{fmt(r['baseline'])} | {fmt(r['new'])} | "
                    f"{r['ratio']:.2f}x | {'✅' if r['ok'] else '❌'} |")
     if failures:

@@ -42,6 +42,12 @@ plus a host-speed calibration scalar so the CI gate
 ``benchmarks/BENCH_many_party.json``) can normalize across runner speeds.
 ``--gate`` is the exact preset the CI perf-gate job sweeps.
 
+``--wire-modes float,int8`` reruns every per-C cell and the serve row
+under each wire format: the int8 rows carry the narrow-ring compressed
+``bytes_per_round`` (packed Z_2^8 uplink, ~4x fewer wire bytes), and the
+gate preset sweeps both so compare.py can enforce that compression
+keeps paying (int8 bytes strictly below float at every C).
+
 Usage:
     PYTHONPATH=src python benchmarks/many_party_scaling.py          # full
     PYTHONPATH=src python benchmarks/many_party_scaling.py --smoke  # C=64
@@ -367,7 +373,11 @@ def _serve_stream_mod():
 def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
         mask_mode, loop_max_c, fused_masks=False, mask_only=False,
         save=None, repeat=1, decode_gen=0, train_chunk=0,
-        serve_requests=0, serve_lanes=8):
+        serve_requests=0, serve_lanes=8, wire_modes=None):
+    # wire sweep: every per-C cell and the serve row run once per wire
+    # format, so narrow-ring compression (mask_mode="int8") shows up as
+    # its own dashboard rows — bytes_per_round is what the gate checks.
+    wire_modes = list(wire_modes) if wire_modes else [mask_mode]
     merged = {}
     ss = _serve_stream_mod() if serve_requests and not mask_only else None
     for rep in range(repeat):
@@ -376,18 +386,22 @@ def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
             # stream through core/serving.ServingEngine; see
             # serve_stream.time_serve). Engine pinned like the decode row.
             sv_eng = engines[0] if len(set(engines)) == 1 else "vectorized"
-            r = ss.time_serve(serve_lanes, serve_requests, engine=sv_eng)
-            k_sv = ("serve", r["engine"])
-            merged[k_sv] = (r if k_sv not in merged
-                            else _merge_min(merged[k_sv], r))
-            rm = merged[k_sv]
-            print(f"many_party serve  engine={r['engine']:10s} "
-                  f"req {serve_requests:2d} x{serve_lanes} lanes  "
-                  f"{rm['serve_ms_per_tok']:8.2f} ms/tok aggregate  "
-                  f"(p50 {rm['serve_p50_ms']:6.1f} ms, "
-                  f"p99 {rm['serve_p99_ms']:6.1f} ms)  "
-                  f"compile {r['compile_s']:6.1f} s"
-                  + (f"  [pass {rep + 1}/{repeat}]" if repeat > 1 else ""))
+            for wire in wire_modes:
+                r = ss.time_serve(serve_lanes, serve_requests,
+                                  engine=sv_eng, wire=wire)
+                k_sv = ("serve", r["engine"], r.get("wire", "float"))
+                merged[k_sv] = (r if k_sv not in merged
+                                else _merge_min(merged[k_sv], r))
+                rm = merged[k_sv]
+                print(f"many_party serve  engine={r['engine']:10s} "
+                      f"wire={wire:6s} "
+                      f"req {serve_requests:2d} x{serve_lanes} lanes  "
+                      f"{rm['serve_ms_per_tok']:8.2f} ms/tok aggregate  "
+                      f"(p50 {rm['serve_p50_ms']:6.1f} ms, "
+                      f"p99 {rm['serve_p99_ms']:6.1f} ms)  "
+                      f"compile {r['compile_s']:6.1f} s"
+                      + (f"  [pass {rep + 1}/{repeat}]"
+                         if repeat > 1 else ""))
         if train_chunk and not mask_only:
             # fused scan-train throughput (see time_train). Swept once
             # per pass like every other cell so the min-merge defeats
@@ -429,53 +443,64 @@ def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
                     print(f"many_party C={C} engine=loop skipped "
                           f"(> --loop-max-c {loop_max_c})")
                     continue
-                fused_eff = fused_masks and eng == "vectorized"
-                sys, nf, setup_s = build(C, n_feat_total, d_embed, 10, eng,
-                                         use_kernel, mask_mode, fused_eff)
-                r = {"C": C, "engine": eng, "batch": batch,
-                     "use_kernel": use_kernel, "fused_masks": fused_eff,
-                     "setup_s": setup_s,
-                     "bytes_per_round": sys.bytes_per_round(batch)}
-                if eng == "sharded":
-                    # record what actually ran: on a 1-device host (or
-                    # when no group divides the axis) the sharded engine
-                    # degrades to plain vmap — don't let a dashboard row
-                    # labeled "sharded" pass off vectorized numbers
-                    from repro import sharding as shard_rules
-                    pdev = shard_rules.party_axis_size(sys.mesh)
-                    sharded_eff = any(
-                        shard_rules.party_shardable(sys.mesh, len(idx))
-                        for _, idx in sys._eng.groups)
-                    r["party_devices"] = pdev if sharded_eff else 1
-                    if not sharded_eff:
-                        print(f"many_party C={C} engine=sharded WARNING: "
-                              f"no party group divides the {pdev}-way "
-                              f"axis — rows measure the vectorized "
-                              f"fallback")
-                # rep counts scale inversely with C: the small-C cells
-                # are sub-millisecond and feed the CI gate, so they need
-                # many more reps than C=128 to beat scheduler noise
-                r.update(time_masks(sys, batch, rounds=max(5, 512 // C)))
-                if not mask_only:
-                    r.update(time_rounds(sys, nf, batch,
-                                         max(rounds, 256 // C)))
-                # per-row host-speed probe: the gate normalizes each cell
-                # by a calibration measured right next to it
-                r["cal_ms"] = calibration_ms(20)
-                key = (C, eng, use_kernel, fused_eff)
-                merged[key] = (r if key not in merged
-                               else _merge_min(merged[key], r))
-                round_txt = ("" if mask_only else
-                             f"round {r['round_ms']:8.2f} ms  "
-                             f"compile {r['compile_s']:6.1f} s  "
-                             f"loss {r['loss']:.3f}  ")
-                print(f"many_party C={C:4d} engine={eng:10s} "
-                      f"{round_txt}"
-                      f"ceremony {setup_s:5.1f} s  "
-                      f"mask_first {r['mask_first_ms']:9.1f} ms  "
-                      f"mask {r['mask_ms']:7.2f} ms"
-                      + (f"  [pass {rep + 1}/{repeat}]"
-                         if repeat > 1 else ""))
+
+                for wire in wire_modes:
+                    # in-kernel mask synthesis only exists for the float
+                    # wire; ring modes take the MaskEngine path
+                    fused_eff = (fused_masks and eng == "vectorized"
+                                 and wire == "float")
+                    sys, nf, setup_s = build(C, n_feat_total, d_embed, 10,
+                                             eng, use_kernel, wire,
+                                             fused_eff)
+                    r = {"C": C, "engine": eng, "batch": batch,
+                         "use_kernel": use_kernel, "fused_masks": fused_eff,
+                         "wire": wire, "setup_s": setup_s,
+                         "bytes_per_round": sys.bytes_per_round(batch)}
+                    if eng == "sharded":
+                        # record what actually ran: on a 1-device host (or
+                        # when no group divides the axis) the sharded
+                        # engine degrades to plain vmap — don't let a
+                        # dashboard row labeled "sharded" pass off
+                        # vectorized numbers
+                        from repro import sharding as shard_rules
+                        pdev = shard_rules.party_axis_size(sys.mesh)
+                        sharded_eff = any(
+                            shard_rules.party_shardable(sys.mesh, len(idx))
+                            for _, idx in sys._eng.groups)
+                        r["party_devices"] = pdev if sharded_eff else 1
+                        if not sharded_eff:
+                            print(f"many_party C={C} engine=sharded "
+                                  f"WARNING: no party group divides the "
+                                  f"{pdev}-way axis — rows measure the "
+                                  f"vectorized fallback")
+                    # rep counts scale inversely with C: the small-C cells
+                    # are sub-millisecond and feed the CI gate, so they
+                    # need many more reps than C=128 to beat scheduler
+                    # noise
+                    r.update(time_masks(sys, batch,
+                                        rounds=max(5, 512 // C)))
+                    if not mask_only:
+                        r.update(time_rounds(sys, nf, batch,
+                                             max(rounds, 256 // C)))
+                    # per-row host-speed probe: the gate normalizes each
+                    # cell by a calibration measured right next to it
+                    r["cal_ms"] = calibration_ms(20)
+                    key = (C, eng, use_kernel, fused_eff, wire)
+                    merged[key] = (r if key not in merged
+                                   else _merge_min(merged[key], r))
+                    round_txt = ("" if mask_only else
+                                 f"round {r['round_ms']:8.2f} ms  "
+                                 f"compile {r['compile_s']:6.1f} s  "
+                                 f"loss {r['loss']:.3f}  ")
+                    print(f"many_party C={C:4d} engine={eng:10s} "
+                          f"wire={wire:6s} "
+                          f"{round_txt}"
+                          f"ceremony {setup_s:5.1f} s  "
+                          f"mask_first {r['mask_first_ms']:9.1f} ms  "
+                          f"mask {r['mask_ms']:7.2f} ms  "
+                          f"bytes/round {r['bytes_per_round']:9d}"
+                          + (f"  [pass {rep + 1}/{repeat}]"
+                             if repeat > 1 else ""))
     rows = list(merged.values())
     if save:
         payload = {
@@ -486,6 +511,7 @@ def run(cs, engines, batch, rounds, d_embed, n_feat_total, use_kernel,
             "calibration_ms": calibration_ms(),
             "config": {"batch": batch, "rounds": rounds, "d_embed": d_embed,
                        "n_features": n_feat_total, "mask_mode": mask_mode,
+                       "wire_modes": wire_modes,
                        "mask_only": mask_only,
                        "decode": {"gen": decode_gen, "batch": DECODE_BATCH,
                                   "prompt": DECODE_PROMPT,
@@ -531,7 +557,12 @@ def main():
                     help="in-kernel pltpu-PRNG mask synthesis (vectorized "
                          "engine only; MaskEngine fallback off-TPU)")
     ap.add_argument("--mask-mode", default="float",
-                    choices=["float", "int32"])
+                    choices=["float", "int32", "int8"])
+    ap.add_argument("--wire-modes", default="",
+                    help="comma-separated wire formats to sweep per cell "
+                         "(e.g. float,int8); empty = just --mask-mode. "
+                         "The gate preset sweeps float,int8 so narrow-"
+                         "ring compression is gated as its own rows")
     ap.add_argument("--mask-only", action="store_true",
                     help="time mask synthesis only (skip training rounds)")
     ap.add_argument("--loop-max-c", type=int, default=16,
@@ -553,6 +584,8 @@ def main():
                          "defeats minute-scale host speed-regime drift")
     ap.add_argument("--save", default="experiments/bench/many_party.json")
     a = ap.parse_args()
+    wire_modes = ([w for w in a.wire_modes.split(",") if w]
+                  if a.wire_modes else None)
     if a.gate:
         # MUST stay in sync with the committed baseline's config block —
         # compare.py refuses to gate across mismatched configs
@@ -562,6 +595,7 @@ def main():
         a.train_chunk = 4
         a.serve_requests, a.serve_lanes = 16, 8
         a.repeat = max(a.repeat, 2)
+        wire_modes = ["float", "int8"]
         save = a.save
     elif a.smoke:
         cs, engines = [64], ["vectorized"]
@@ -580,7 +614,7 @@ def main():
         fused_masks=a.fused_masks, mask_only=a.mask_only, save=save,
         repeat=a.repeat, decode_gen=a.decode_gen,
         train_chunk=a.train_chunk, serve_requests=a.serve_requests,
-        serve_lanes=a.serve_lanes)
+        serve_lanes=a.serve_lanes, wire_modes=wire_modes)
 
 
 if __name__ == "__main__":

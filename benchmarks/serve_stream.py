@@ -47,9 +47,10 @@ SERVE_LANES, SERVE_REQUESTS = 8, 16
 SERVE_PROMPT, SERVE_GEN, SERVE_CHUNK = 8, 8, 4
 
 
-def build_lm(engine: str = "vectorized"):
+def build_lm(engine: str = "vectorized", wire: str = "float"):
     cfg = smoke_variant(get_config(SERVE_ARCH))
-    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1)
+    e = EasterConfig(num_passive=3, d_embed=64, decision_layers=1,
+                     mask_mode=wire)
     lm = EasterLM(cfg=cfg, easter=e, engine=engine)
     params = lm.init_params(jax.random.PRNGKey(0))
     return cfg, lm, params
@@ -107,15 +108,18 @@ def time_serve(lanes: int = SERVE_LANES, requests: int = SERVE_REQUESTS,
                engine: str = "vectorized", reps: int = 3, *,
                prompt_len: int = SERVE_PROMPT, gen: int = SERVE_GEN,
                chunk: int = SERVE_CHUNK, eos_id: int = 7,
-               seed: int = 0) -> dict:
+               seed: int = 0, wire: str = "float") -> dict:
     """The ``kind="serve"`` dashboard row: Poisson stream end-to-end.
 
     ``serve_ms_per_tok`` (min-of-reps aggregate wall / decoded tokens)
     and ``serve_p99_ms`` (min-of-reps tail latency) are the gated
     metrics; ``agg_tokens_per_s`` is the dashboard-friendly inverse.
     Min over reps per metric — the fastest observation estimates
-    capability, same statistic as every other cell."""
-    cfg, lm, params = build_lm(engine)
+    capability, same statistic as every other cell. ``wire`` selects the
+    mask/wire format the blinded per-token rounds run under ("float" |
+    "int32" | "int8" narrow ring) — swept by the gate so wire
+    compression shows up as its own row."""
+    cfg, lm, params = build_lm(engine, wire)
     eng = serving.ServingEngine(lm, params, lanes=lanes,
                                 max_len=prompt_len + gen, chunk=chunk,
                                 base_key=seed)
@@ -134,7 +138,8 @@ def time_serve(lanes: int = SERVE_LANES, requests: int = SERVE_REQUESTS,
         best["wall"] = min(best["wall"], wall)
         best["p50"] = min(best["p50"], p50)
         best["p99"] = min(best["p99"], p99)
-    row = {"kind": "serve", "C": 4, "engine": engine, "lanes": lanes,
+    row = {"kind": "serve", "C": 4, "engine": engine, "wire": wire,
+           "lanes": lanes,
            "requests": requests, "prompt": prompt_len, "gen": gen,
            "chunk": chunk, "tokens": toks,
            "serve_ms_per_tok": best["wall"] * 1e3 / toks,
@@ -238,6 +243,9 @@ def main():
     ap.add_argument("--lanes", type=int, default=SERVE_LANES)
     ap.add_argument("--requests", type=int, default=SERVE_REQUESTS)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--wire", default="float",
+                    choices=["float", "int32", "int8"],
+                    help="wire format for the blinded serve rounds")
     ap.add_argument("--ab", action="store_true",
                     help="run the two serve-tier acceptance A/Bs "
                          "(batched-vs-sequential throughput, "
@@ -262,8 +270,9 @@ def main():
               f"{e['ratio'] * 100:.1f}% of no-exit wall "
               f"(target < 60%) {'PASS' if ok2 else 'FAIL'}")
         raise SystemExit(0 if ok and ok2 else 1)
-    r = time_serve(a.lanes, a.requests, a.engine, a.reps, seed=a.seed)
-    print(f"serve engine={r['engine']} lanes={r['lanes']} "
+    r = time_serve(a.lanes, a.requests, a.engine, a.reps, seed=a.seed,
+                   wire=a.wire)
+    print(f"serve engine={r['engine']} wire={r['wire']} lanes={r['lanes']} "
           f"requests={r['requests']} chunk={r['chunk']}: "
           f"{r['tokens']} tokens, {r['agg_tokens_per_s']:.1f} tok/s "
           f"aggregate ({r['serve_ms_per_tok']:.2f} ms/tok), "

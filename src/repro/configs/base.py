@@ -158,7 +158,7 @@ class EasterConfig:
     """EASTER protocol configuration (paper §IV)."""
     num_passive: int = 3            # K; C = K + 1 (paper uses C = 4)
     d_embed: int = 128              # shared embedding space (paper Fig. 6: 128)
-    mask_mode: str = "float"        # float (paper) | int32 (beyond-paper)
+    mask_mode: str = "float"        # float (paper) | int32 | int8 (ring wire)
     fresh_masks: bool = True        # per-round PRF fold-in (beyond-paper)
     decision_layers: int = 2        # PL depth; paper finds EL:PL = 1:1 best
     # passive parties run reduced "proxy" backbones (heterogeneous setting):

@@ -10,6 +10,9 @@ Forms provided:
     is what the SPMD train/serve steps lower (GSPMD turns the reduction into
     the party all-reduce when party weights/activations are sharded).
   * ``aggregate_int32``      — ring Z_2^32 fixed-point variant (beyond-paper).
+  * ``aggregate_ring``/``aggregate_int8`` — width-parameterized ring
+    aggregation; int8 ships 1-byte ring elements under a per-round dynamic
+    scale (the narrow-ring wire mode, blinding.ring_scale).
   * the fused Pallas kernel lives in ``repro.kernels.blind_agg`` (mask-add +
     party-mean in one VMEM pass); ``use_kernel=True`` routes through it.
 """
@@ -97,3 +100,52 @@ def aggregate_int32(E_all: jnp.ndarray, masks_i32: jnp.ndarray) -> jnp.ndarray:
     up = blinding.blind_uplink(E_all[1:], masks_i32, "int32")
     s = blinding.quantize(E_all[0]) + jnp.sum(up, axis=0)
     return blinding.dequantize(s) / C
+
+
+def aggregate_int8_blinded(q_uplink: jnp.ndarray, scale) -> jnp.ndarray:
+    """Narrow-ring aggregate from an ALREADY-blinded stack: (C, ...) int8
+    rows quantized under ``scale`` (+ masked, for passives). The sum runs
+    in int32 and is WRAPPED back to int8 — jnp.sum would otherwise
+    promote and the masks only cancel mod 256. By the ring_scale
+    headroom the true C-party sum fits in [-127, 127], so the wrapped
+    byte IS the true sum and dequantization is exact on the scale grid."""
+    C = q_uplink.shape[0]
+    s = jnp.sum(q_uplink.astype(jnp.int32), axis=0).astype(jnp.int8)
+    return blinding.dequantize(s, scale) / C
+
+
+def aggregate_int8(E_all: jnp.ndarray, masks_i8: jnp.ndarray,
+                   scale=None) -> jnp.ndarray:
+    """Ring-exact int8 secure aggregation (the narrow-ring wire mode).
+
+    E_all (C, ...) float; masks_i8 (K, ...) int8 with ring-sum zero mod
+    256. ``scale`` defaults to the per-round dynamic scale derived from
+    max|E_all| (every engine computes the same scalar — fp max is exact —
+    so loop/vectorized/sharded stay bit-exact). Quantization error
+    <= 0.5*C/scale per element, amax-relative like any dynamic int8."""
+    C = E_all.shape[0]
+    if scale is None:
+        scale = blinding.ring_scale(jnp.max(jnp.abs(E_all)), C, "int8")
+    up = blinding.blind_uplink(E_all[1:], masks_i8, "int8", scale)
+    q_a = blinding.quantize_ring(E_all[0], "int8", scale)
+    stack = jnp.concatenate([q_a[None], up], axis=0)
+    return aggregate_int8_blinded(stack, scale)
+
+
+def aggregate_ring(E_all: jnp.ndarray, masks: jnp.ndarray, mode: str,
+                   scale=None) -> jnp.ndarray:
+    """Width-parameterized ring aggregation: one entry point for every
+    Z_2^w wire mode (``blinding.RING_MODES``)."""
+    if mode == "int32":
+        return aggregate_int32(E_all, masks)
+    assert mode == "int8", mode
+    return aggregate_int8(E_all, masks, scale)
+
+
+def aggregate_ring_blinded(q_uplink: jnp.ndarray, mode: str,
+                           scale=None) -> jnp.ndarray:
+    """``aggregate_ring`` from an already-blinded (C, ...) stack."""
+    if mode == "int32":
+        return aggregate_int32_blinded(q_uplink)
+    assert mode == "int8", mode
+    return aggregate_int8_blinded(q_uplink, scale)

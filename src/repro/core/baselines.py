@@ -18,10 +18,20 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import losses
+from repro.core import blinding, losses
 from repro.core.party_models import PartyArch, decide_fn, embed_fn, init_party
 from repro.models.layers import init_linear, linear
 from repro.optim import make_optimizer
+
+# wire framing of a baseline's comm legs: bytes/element derives from the
+# wire dtype instead of a hard-coded fp32 (int8 ships packed ring words
+# + a per-leg fp32 scale — blinding.wire_leg_bytes, same accounting the
+# EASTER protocol uses)
+_WIRE_MODE = {"float32": "float", "int32": "int32", "int8": "int8"}
+
+
+def _leg_bytes(n_elts: int, wire_dtype: str) -> int:
+    return blinding.wire_leg_bytes(n_elts, _WIRE_MODE[wire_dtype])
 
 
 def _topk_sparsify(x: jnp.ndarray, keep_frac: float) -> jnp.ndarray:
@@ -42,6 +52,7 @@ class SplitVFL:
     top_hidden: int = 128
     compress_frac: float = 0.0
     loss: str = "ce"
+    wire_dtype: str = "float32"
 
     def __post_init__(self):
         self.C = len(self.arches)
@@ -77,11 +88,15 @@ class SplitVFL:
         return jnp.broadcast_to(acc, (self.C,))
 
     def bytes_per_round(self, batch: int) -> int:
-        """Uplink activations + downlink grads per round (fp32)."""
-        d_cat = sum(a.d_embed for a in self.arches[1:])
-        per = d_cat * batch * 4
+        """Uplink activations + downlink grads per round, framed in
+        ``wire_dtype`` (fp32 keeps the historical numbers bit-identical;
+        top-k compression supersedes dtype narrowing when enabled)."""
         if self.compress_frac > 0:
-            per = int(per * self.compress_frac * 2)  # values + indices
+            d_cat = sum(a.d_embed for a in self.arches[1:])
+            per = int(d_cat * batch * 4 * self.compress_frac * 2)
+            return 2 * per                           # values + indices
+        per = sum(_leg_bytes(a.d_embed * batch, self.wire_dtype)
+                  for a in self.arches[1:])
         return 2 * per                               # up + down
 
 
@@ -91,6 +106,7 @@ class AggVFL:
     arches: List[PartyArch]
     n_features: List[int]
     loss: str = "ce"
+    wire_dtype: str = "float32"
 
     def __post_init__(self):
         self.C = len(self.arches)
@@ -122,7 +138,8 @@ class AggVFL:
 
     def bytes_per_round(self, batch: int) -> int:
         n_cls = self.arches[0].n_classes
-        return 2 * (self.C - 1) * batch * n_cls * 4
+        return 2 * (self.C - 1) * _leg_bytes(batch * n_cls,
+                                             self.wire_dtype)
 
 
 @dataclass

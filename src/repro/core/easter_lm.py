@@ -249,8 +249,12 @@ class EasterLM:
             E_all = jnp.where(keep, E_all, 0)
             if masks is not None:
                 masks = jnp.where(keep, masks, 0)
-        if masks is not None and self.easter.mask_mode == "int32":
-            E = aggregation.aggregate_int32(E_all, masks)
+        if masks is not None and self.easter.mask_mode in blinding.RING_MODES:
+            # int8 derives its per-round dynamic scale INSIDE aggregate_ring
+            # from the lane-zeroed stack above, so frozen lanes influence
+            # neither the scale nor the wire bytes
+            E = aggregation.aggregate_ring(E_all, masks,
+                                           self.easter.mask_mode)
         else:
             E = aggregation.blind_and_aggregate(E_all, masks)
         E = shard_hints.constrain(E, ("batch", None, None))
@@ -280,13 +284,19 @@ class EasterLM:
         total = jnp.sum(jnp.stack(per)) + jnp.sum(jnp.stack(auxes))
         return total, jnp.stack(per)
 
-    def _aggregate_grouped(self, E_a, up_p, blinded: bool):
+    def _aggregate_grouped(self, E_a, up_p, blinded: bool, scale=None):
         """Aggregate the active embedding with the (gathered) passive
         uplink, replaying ``_aggregate``'s op order bit-for-bit. ``up_p``
-        is already blinded when ``blinded`` (float: E+r; int32:
-        quantize(E)+r), raw otherwise (seeds=None oracle)."""
+        is already blinded when ``blinded`` (float: E+r; ring modes:
+        quantize(E)+r), raw otherwise (seeds=None oracle). int8 needs the
+        per-round ``scale`` the uplink was quantized under."""
         if not blinded:
             return jnp.mean(jnp.concatenate([E_a[None], up_p], axis=0), 0)
+        if self.easter.mask_mode == "int8":
+            return aggregation.aggregate_int8_blinded(
+                jnp.concatenate(
+                    [blinding.quantize_ring(E_a, "int8", scale)[None],
+                     up_p], 0), scale)
         if self.easter.mask_mode == "int32":
             return aggregation.aggregate_int32_blinded(
                 jnp.concatenate([blinding.quantize(E_a)[None], up_p], 0))
@@ -367,16 +377,41 @@ class EasterLM:
             return (E_k, jax.lax.all_gather(aux_k, ax, axis=0, tiled=True),
                     jax.lax.all_gather(up, ax, axis=0, tiled=True))
 
+        def embed_body8(pp, tok, f, m, amax_a):
+            # int8-only twin of embed_body: every shard agrees on the
+            # global amax (fp max is exact, so the pmax reproduces the
+            # vectorized engine's max|E_all| bitwise) before quantizing
+            # its own rows under the shared per-round scale.
+            def one(p):
+                E_k, _, aux_k = self.local_embed(p, pcfg_p, tok, **f)
+                return E_k, aux_k
+
+            E_k, aux_k = jax.vmap(one)(pp)
+            amax = jnp.maximum(amax_a,
+                               jax.lax.pmax(jnp.max(jnp.abs(E_k)), ax))
+            scale = blinding.ring_scale(amax, C, "int8")
+            up = blinding.blind_uplink(E_k, m, "int8", scale)
+            return (E_k, jax.lax.all_gather(aux_k, ax, axis=0, tiled=True),
+                    jax.lax.all_gather(up, ax, axis=0, tiled=True), scale)
+
+        scale = None
         if masks is None:
             E_loc, aux_p, up_p = shard_rules.shard_map_compat(
                 embed_body, mesh, in_specs=(P(ax), P(), P()),
                 out_specs=(P(ax), P(), P()))(stacked, tokens, fe)
+        elif mask_mode == "int8":
+            amax_a = jnp.max(jnp.abs(E_a))
+            E_loc, aux_p, up_p, scale = shard_rules.shard_map_compat(
+                embed_body8, mesh,
+                in_specs=(P(ax), P(), P(), P(ax), P()),
+                out_specs=(P(ax), P(), P(), P()))(
+                    stacked, tokens, fe, masks, amax_a)
         else:
             E_loc, aux_p, up_p = shard_rules.shard_map_compat(
                 embed_body, mesh, in_specs=(P(ax), P(), P(), P(ax)),
                 out_specs=(P(ax), P(), P()))(stacked, tokens, fe, masks)
 
-        E = self._aggregate_grouped(E_a, up_p, masks is not None)
+        E = self._aggregate_grouped(E_a, up_p, masks is not None, scale)
         E = E.astype(E_a.dtype)
         if self.grad_mode == "easter":
             E_for_a = (jax.lax.stop_gradient(E)
@@ -519,7 +554,7 @@ class EasterLM:
 
     def _passive_embed_grouped(self, params, tokens, caches, pos,
                                window_override, fe_list, round_idx, seeds,
-                               lane_mask=None):
+                               lane_mask=None, amax_a=None):
         """Shared passive-side embed of the grouped serve/prefill paths.
 
         Stacks the K passive params/caches/frontend-extras and runs ONE
@@ -527,10 +562,13 @@ class EasterLM:
         (and the per-request masks) lays out over the party mesh and the
         blinded uplink is gathered in-shard, mirroring training.
 
-        Returns ``(up_p, new_caches_p, blinded)``: the (K, B, S, d)
+        Returns ``(up_p, new_caches_p, blinded, scale)``: the (K, B, S, d)
         passive uplink as the active party observes it (blinded when
-        ``seeds`` is set), the stacked new passive caches, and whether
-        blinding was applied.
+        ``seeds`` is set), the stacked new passive caches, whether
+        blinding was applied, and — int8 sharded only — the per-round
+        dynamic scale agreed in-shard (``amax_a`` is the active party's
+        lane-zeroed max|E_a|, folded into the pmax so the scale matches
+        the vectorized engine's max|E_all| bitwise).
         """
         pcfg_p = self.party_cfgs[1]
         wo = window_override
@@ -549,25 +587,41 @@ class EasterLM:
 
         if not self._shard_ok():
             E_p, nc_p = embed_k(sp, sc, sfe, tokens, pos)
-            return E_p, nc_p, None       # caller blinds via _aggregate
+            return E_p, nc_p, None, None  # caller blinds via _aggregate
         mesh, ax = self.party_mesh, shard_rules.PARTY_AXIS
         # (B, S, d) per-party embedding shape this step produces
         eshape = (tokens.shape[0], tokens.shape[1], self.easter.d_embed)
         masks = self.masks_for(eshape, round_idx, seeds, mesh=mesh)
         mask_mode = self.easter.mask_mode
+        want_scale = masks is not None and mask_mode == "int8"
+        C = self.C
 
         def body(pp, cc, f, tok, pos_, *rest):
             rest = list(rest)
             m = rest.pop(0) if masks is not None else None
             keep = rest.pop(0) if lane_mask is not None else None
+            amax_in = rest.pop(0) if want_scale else None
             E_k, nc = embed_k(pp, cc, f, tok, pos_)
-            up = blinding.blind_uplink(E_k, m, mask_mode)
+            scale = None
+            if amax_in is not None:
+                # amax over LANE-ZEROED embeddings: frozen lanes must not
+                # move the scale (the vmap path zeroes E_all before its
+                # max), and every shard pmax-agrees on the same scalar
+                E_z = E_k
+                if keep is not None:
+                    kz = keep.reshape((1, -1) + (1,) * (E_k.ndim - 2))
+                    E_z = jnp.where(kz, E_k, 0)
+                amax = jnp.maximum(amax_in, jax.lax.pmax(
+                    jnp.max(jnp.abs(E_z)), ax))
+                scale = blinding.ring_scale(amax, C, "int8")
+            up = blinding.blind_uplink(E_k, m, mask_mode, scale)
             if keep is not None:
                 # frozen request lanes ship an exactly-zero uplink
                 # (mirrors _aggregate's lane zeroing on the vmap path)
                 kb = keep.reshape((1, -1) + (1,) * (up.ndim - 2))
                 up = jnp.where(kb, up, 0)
-            return jax.lax.all_gather(up, ax, axis=0, tiled=True), nc
+            outs = (jax.lax.all_gather(up, ax, axis=0, tiled=True), nc)
+            return outs + ((scale,) if want_scale else ())
 
         # params / caches / frontend-extras all carry the stacked K axis
         specs = [P(ax), P(ax), P(ax), P(), P()]
@@ -578,10 +632,16 @@ class EasterLM:
         if lane_mask is not None:
             specs.append(P())
             args.append(lane_mask)
-        up_p, nc_p = shard_rules.shard_map_compat(
+        if want_scale:
+            specs.append(P())
+            args.append(jnp.asarray(0.0 if amax_a is None else amax_a,
+                                    jnp.float32))
+        out_specs = (P(), P(ax)) + ((P(),) if want_scale else ())
+        res = shard_rules.shard_map_compat(
             body, mesh, in_specs=tuple(specs),
-            out_specs=(P(), P(ax)))(*args)
-        return up_p, nc_p, masks is not None
+            out_specs=out_specs)(*args)
+        scale = res[2] if want_scale else None
+        return res[0], res[1], masks is not None, scale
 
     def _serve_step_grouped(self, params, tokens, caches, pos, seeds,
                             window_override, fe_list, round_idx,
@@ -591,9 +651,19 @@ class EasterLM:
         E_a, nc_a, _ = self.local_embed(
             params["parties"][0], pcfg_a, tokens, caches=caches[0],
             pos_offset=pos, window_override=window_override, **fe_a)
-        up_p, nc_p, blinded = self._passive_embed_grouped(
+        amax_a = None
+        if (self.easter.mask_mode == "int8" and seeds is not None
+                and self._shard_ok()):
+            # int8 sharded: the active party's lane-zeroed amax feeds the
+            # in-shard scale agreement (hoisted before the passive call)
+            E_a_z = E_a
+            if lane_mask is not None:
+                ka = lane_mask.reshape((-1,) + (1,) * (E_a.ndim - 1))
+                E_a_z = jnp.where(ka, E_a, 0)
+            amax_a = jnp.max(jnp.abs(E_a_z))
+        up_p, nc_p, blinded, scale = self._passive_embed_grouped(
             params, tokens, caches, pos, window_override, fe_list,
-            round_idx, seeds, lane_mask)
+            round_idx, seeds, lane_mask, amax_a)
         if blinded is None:              # vectorized: blind in _aggregate
             E_all, E = self._aggregate(
                 jnp.concatenate([E_a[None], up_p], axis=0),
@@ -605,7 +675,8 @@ class EasterLM:
                 # the identical (zero) aggregate row for frozen lanes
                 ka = lane_mask.reshape((-1,) + (1,) * (E_a.ndim - 1))
                 E_a = jnp.where(ka, E_a, 0)
-            E = self._aggregate_grouped(E_a, up_p, blinded).astype(E_a.dtype)
+            E = self._aggregate_grouped(E_a, up_p, blinded,
+                                        scale).astype(E_a.dtype)
         logits = self.decide(params["parties"][0], pcfg_a, E)
         new_caches = [nc_a] + unstack_tree(nc_p, self.easter.num_passive)
         return logits, new_caches
@@ -657,15 +728,19 @@ class EasterLM:
         E_a, nc_a, _ = self.local_embed(
             params["parties"][0], pcfg_a, tokens, caches=caches[0],
             window_override=window_override, **fe_a)
-        up_p, nc_p, blinded = self._passive_embed_grouped(
+        amax_a = None
+        if (self.easter.mask_mode == "int8" and seeds is not None
+                and self._shard_ok()):
+            amax_a = jnp.max(jnp.abs(E_a))
+        up_p, nc_p, blinded, scale = self._passive_embed_grouped(
             params, tokens, caches, 0, window_override, fe_list,
-            blinding.PREFILL_DOMAIN + round_idx, seeds)
+            blinding.PREFILL_DOMAIN + round_idx, seeds, amax_a=amax_a)
         if blinded is None:              # vectorized: blind in _aggregate
             _, E = self._aggregate(
                 jnp.concatenate([E_a[None], up_p], axis=0),
                 blinding.PREFILL_DOMAIN + round_idx, seeds)
         else:                            # sharded: uplink already blinded
-            E = self._aggregate_grouped(E_a, up_p, blinded)
+            E = self._aggregate_grouped(E_a, up_p, blinded, scale)
         new_caches = [nc_a] + unstack_tree(nc_p, self.easter.num_passive)
         return E, new_caches
 

@@ -234,6 +234,73 @@ class PartyEngine:
             ups.append(up)
         return E_parts, self._scatter(ups)
 
+    def embed_blind_uplink_scaled(self, params: Sequence[dict],
+                                  xs: Sequence[jnp.ndarray],
+                                  full_masks: jnp.ndarray,
+                                  mask_mode: str = "int8"):
+        """Dynamic-scale twin of ``embed_blind_uplink`` for the int8 wire:
+        returns ``(E_parts, uplink, scale)``.
+
+        The int8 ring scale depends on the GLOBAL max |E| over every
+        party's embedding, so blinding cannot be fused into the embed
+        pass: stage 1 embeds in-shard and all-gathers ONE |E|-max scalar
+        per party (the int8 mode's documented magnitude leak — scalars,
+        never embedding-shaped wire); the replicated graph folds them
+        into the shared ``blinding.ring_scale``; stage 2 blinds in-shard
+        under that scale (passed replicated, spec ``P()``) and gathers
+        the int8 uplink with the active row zeroed, exactly like the
+        unscaled path. fp ``max`` is exact and associative, so the
+        two-stage scale is bit-identical to the vectorized engine's
+        single ``jnp.max(|E_all|)``.
+        """
+        assert full_masks is not None and mask_mode == "int8", mask_mode
+        ax = self.party_axis
+        E_parts, amaxes = [], []
+        for (arch, _), idx in self.groups:
+            sp = stack_trees([params[i] for i in idx])
+            sx = jnp.stack([xs[i] for i in idx])
+
+            def body(p, x, a=arch):
+                E = jax.vmap(lambda pi, xi: embed_fn(pi, a, xi))(p, x)
+                return E, jnp.max(jnp.abs(E), axis=tuple(range(1, E.ndim)))
+
+            if self._sharded(len(idx)):
+                def sh_body(p, x, f=body):
+                    E, am = f(p, x)
+                    return E, jax.lax.all_gather(am, ax, axis=0, tiled=True)
+                E_loc, am = shard_rules.shard_map_compat(
+                    sh_body, self.mesh, in_specs=(P(ax), P(ax)),
+                    out_specs=(P(ax), P()))(sp, sx)
+            else:
+                E_loc, am = body(sp, sx)
+            E_parts.append(E_loc)
+            amaxes.append(am)
+        scale = blinding.ring_scale(jnp.max(jnp.concatenate(amaxes)),
+                                    self.C, mask_mode)
+        ups = []
+        for g, ((arch, _), idx) in enumerate(self.groups):
+            gm = self._gather(full_masks, idx)
+            i0 = idx.index(0) if 0 in idx else -1
+            if self._sharded(len(idx)):
+                def sh_blind(E, m, s, i0=i0):
+                    up = blinding.blind_uplink(E, m, mask_mode, s)
+                    if i0 >= 0:
+                        gids = (jax.lax.axis_index(ax) * up.shape[0]
+                                + jnp.arange(up.shape[0]))
+                        keep = (gids != i0).reshape(
+                            (-1,) + (1,) * (up.ndim - 1))
+                        up = jnp.where(keep, up, jnp.zeros_like(up))
+                    return jax.lax.all_gather(up, ax, axis=0, tiled=True)
+                up = shard_rules.shard_map_compat(
+                    sh_blind, self.mesh, in_specs=(P(ax), P(ax), P()),
+                    out_specs=P())(E_parts[g], gm, scale)
+            else:
+                up = blinding.blind_uplink(E_parts[g], gm, mask_mode, scale)
+                if i0 >= 0:
+                    up = up.at[i0].set(0)
+            ups.append(up)
+        return E_parts, self._scatter(ups), scale
+
     def aggregate_via_active(self, E_parts: List[jnp.ndarray],
                              uplink: jnp.ndarray, agg_fn: Callable
                              ) -> jnp.ndarray:

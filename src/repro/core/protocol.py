@@ -109,12 +109,14 @@ class EasterClassifier:
                 "fused (in-kernel) mask synthesis is float-mode only"
             assert self.engine == "vectorized", \
                 "fused mask synthesis requires the vectorized engine"
+        assert self.easter.mask_mode in ("float",) + blinding.RING_MODES, \
+            self.easter.mask_mode
         # ring masks are dense, so a top-k-sparsified uplink saves no wire
-        # bytes in int32 mode (see bytes_per_round) — the combination would
-        # pay sparsification accuracy loss for nothing; reject it
+        # bytes in any ring mode (see bytes_per_round) — the combination
+        # would pay sparsification accuracy loss for nothing; reject it
         assert not (self.compress_frac > 0
-                    and self.easter.mask_mode == "int32"), \
-            "compress_frac has no wire benefit under int32 ring masking"
+                    and self.easter.mask_mode in blinding.RING_MODES), \
+            "compress_frac has no wire benefit under ring masking"
 
     # -- params ------------------------------------------------------------
     def init_params(self, key) -> List[dict]:
@@ -156,8 +158,9 @@ class EasterClassifier:
         if isinstance(masks, blinding.FusedMasks):
             return aggregation.blind_and_aggregate_fused(
                 E_all, self.mask_engine, masks.round_idx)
-        if masks is not None and self.easter.mask_mode == "int32":
-            return aggregation.aggregate_int32(E_all, masks)
+        if masks is not None and self.easter.mask_mode in blinding.RING_MODES:
+            return aggregation.aggregate_ring(E_all, masks,
+                                              self.easter.mask_mode)
         return aggregation.blind_and_aggregate(E_all, masks,
                                                use_kernel=self.use_kernel)
 
@@ -214,10 +217,26 @@ class EasterClassifier:
             assert not isinstance(masks, blinding.FusedMasks)
             full_masks = jnp.concatenate(
                 [jnp.zeros((1,) + masks.shape[1:], masks.dtype), masks], 0)
-        E_parts, up = self._eng.embed_blind_uplink(
-            params, xs, full_masks, self.easter.mask_mode)
+        scale = None
+        if full_masks is not None and self.easter.mask_mode == "int8":
+            # int8 needs the per-round GLOBAL scale before anyone blinds:
+            # stage 1 gathers per-party |E| maxima (scalars — the
+            # documented int8 magnitude leak), stage 2 blinds in-shard
+            # under the shared scale (see party_engine).
+            E_parts, up, scale = self._eng.embed_blind_uplink_scaled(
+                params, xs, full_masks, "int8")
+        else:
+            E_parts, up = self._eng.embed_blind_uplink(
+                params, xs, full_masks, self.easter.mask_mode)
         if masks is None:
             E = jnp.mean(up, axis=0)
+        elif self.easter.mask_mode == "int8":
+            E = self._eng.aggregate_via_active(
+                E_parts, up,
+                lambda e_a, u: aggregation.aggregate_int8_blinded(
+                    jnp.concatenate(
+                        [blinding.quantize_ring(e_a, "int8", scale)[None],
+                         u[1:]], 0), scale))
         elif self.easter.mask_mode == "int32":
             E = self._eng.aggregate_via_active(
                 E_parts, up,
@@ -344,23 +363,31 @@ class EasterClassifier:
         blinded embeddings up + global embedding down + predictions up +
         loss signal down.
 
-        Wire format depends on mask_mode: float mode ships fp32 blinded
-        embeddings (4 B/elt) and composes with top-k compression
+        Wire format depends on mask_mode — bytes/element derive from the
+        wire dtype (``blinding.wire_leg_bytes``, satellite of the int8
+        work: the accounting can no longer hard-code 4 B/elt). float mode
+        ships fp32 payloads (4 B/elt) and composes with top-k compression
         (values + int32 indices). int32 ring mode ships Z_2^32 ring
-        elements (4 B/elt) — and because ring masks are DENSE, top-k
-        sparsification cannot shrink the blinded uplink (a sparse wire
-        would reveal which coordinates were masked-only), so the
-        compress_frac discount does not apply there.
+        elements (4 B/elt). int8 ring mode ships Z_2^8 elements packed
+        4-per-int32 word plus one fp32 scale scalar per leg, on ALL FOUR
+        legs (the downlink is already grid-quantized, so re-shipping it
+        as int8 words is exact; predictions/loss signals are
+        point-to-point int8 under their own per-leg scale). Because ring
+        masks are DENSE, top-k sparsification cannot shrink a ring-mode
+        uplink (a sparse wire would reveal which coordinates were
+        masked-only), so the compress_frac discount applies to float
+        mode only.
         """
         d_e = self.easter.d_embed
         n_cls = self.arches[0].n_classes
-        elt = 4  # fp32 and int32 ring elements are both 4-byte words
-        up_e = self.K * batch * d_e * elt
-        if self.compress_frac > 0 and self.easter.mask_mode != "int32":
-            up_e = int(up_e * self.compress_frac * 2)  # values + indices
-        down_e = self.K * batch * d_e * 4
-        up_r = self.K * batch * n_cls * 4
-        down_l = self.K * batch * n_cls * 4
+        mode = self.easter.mask_mode
+        up_e = self.K * blinding.wire_leg_bytes(batch * d_e, mode)
+        if self.compress_frac > 0 and mode not in blinding.RING_MODES:
+            # values + indices
+            up_e = int(self.K * batch * d_e * 4 * self.compress_frac * 2)
+        down_e = self.K * blinding.wire_leg_bytes(batch * d_e, mode)
+        up_r = self.K * blinding.wire_leg_bytes(batch * n_cls, mode)
+        down_l = self.K * blinding.wire_leg_bytes(batch * n_cls, mode)
         return up_e + down_e + up_r + down_l
 
     def accuracy(self, params, xs, y) -> jnp.ndarray:

@@ -60,8 +60,12 @@ def main():
                          "step-at-a-time driver (the A/B oracle)")
     ap.add_argument("--num-passive", type=int, default=3)
     ap.add_argument("--d-embed", type=int, default=128)
-    ap.add_argument("--mask-mode", default="float",
-                    choices=["float", "int32"])
+    ap.add_argument("--mask-mode", "--wire", dest="mask_mode",
+                    default="float",
+                    choices=["float", "int32", "int8"],
+                    help="wire format: float (paper) | int32 ring | int8 "
+                         "narrow ring (quantized blinded uplink, ~4x "
+                         "fewer bytes/round)")
     ap.add_argument("--no-easter", action="store_true")
     ap.add_argument("--grad-mode", default="easter",
                     choices=["easter", "joint"])

@@ -31,7 +31,25 @@ def integers(min_value, max_value):
     return _Integers(min_value, max_value)
 
 
-strategies = SimpleNamespace(integers=integers)
+class _SampledFrom:
+    """``st.sampled_from`` over a finite element list. ``lo``/``hi`` are
+    the first/last elements so ``given``'s corner product still visits
+    both ends of the list before the random walk."""
+
+    def __init__(self, elements):
+        self.elements = list(elements)
+        assert self.elements, "sampled_from needs at least one element"
+        self.lo, self.hi = self.elements[0], self.elements[-1]
+
+    def example(self, rng: random.Random):
+        return rng.choice(self.elements)
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+strategies = SimpleNamespace(integers=integers, sampled_from=sampled_from)
 
 
 def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):

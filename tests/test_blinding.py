@@ -95,7 +95,7 @@ def test_blinded_agg_equals_plain(K, n, d, seed):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("mode", ["float", "int32"])
+@pytest.mark.parametrize("mode", ["float", "int32", "int8"])
 @pytest.mark.parametrize("K,r", [(2, 0), (3, 0), (5, 4), (6, 1)])
 def test_mask_engine_bit_exact_vs_loop_oracle(mode, K, r):
     """The batched engine (one vmapped PRF + scan fold) must reproduce the
@@ -121,14 +121,15 @@ def test_mask_engine_scalar_and_scale_match_loop():
         assert np.array_equal(want, got), scalar
 
 
-@pytest.mark.parametrize("mode", ["float", "int32"])
+@pytest.mark.parametrize("mode", ["float", "int32", "int8"])
 def test_mask_engine_cancellation(mode):
     eng = blinding.setup_mask_engine(5, deterministic_seed=43)
     masks = np.asarray(eng.masks((4, 16), 3, mode))
-    resid = np.asarray(jnp.sum(jnp.asarray(masks), axis=0))
-    if mode == "int32":
-        assert np.all(resid == 0)
+    if mode in blinding.RING_MODES:
+        bits = 8 * masks.dtype.itemsize
+        assert np.all(masks.astype(np.int64).sum(0) % (1 << bits) == 0)
     else:
+        resid = np.asarray(jnp.sum(jnp.asarray(masks), axis=0))
         scale = np.abs(masks).max() + 1e-9
         assert np.abs(resid).max() / scale < 1e-5
 
@@ -195,3 +196,96 @@ def test_int32_agg_quantization_bound(K, seed):
     bound = (K + 1) / (2 * blinding.FIXED_POINT_SCALE) * 4
     np.testing.assert_allclose(np.asarray(agg),
                                np.asarray(jnp.mean(E_all, 0)), atol=bound)
+
+
+# ---------------------------------------------------------------------------
+# narrow-ring (int8) wire mode: width-parameterized ring properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(mode=st.sampled_from(list(blinding.RING_MODES)),
+       K=st.integers(2, 6), r=st.integers(0, 5), n=st.integers(1, 8))
+def test_ring_masks_cancel_exactly_every_width(mode, K, r, n):
+    """Mask sum is EXACT ring zero for every supported ring width (mod
+    2^w in the ring's own word size, not float-approximate)."""
+    _, seeds = blinding.setup_passive_parties(K, deterministic_seed=67)
+    masks = np.asarray(blinding.all_party_masks(K, seeds, (n, 4), r, mode))
+    assert masks.dtype == np.dtype(mode)  # "int32"/"int8" name the dtype
+    bits = 8 * masks.dtype.itemsize
+    assert np.all(masks.astype(np.int64).sum(axis=0) % (1 << bits) == 0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(K=st.integers(2, 6), seed=st.integers(0, 50), r=st.integers(0, 3))
+def test_int8_quantize_blind_aggregate_roundtrip(K, seed, r):
+    """quantize -> blind -> ring-aggregate -> dequantize recovers the
+    plain mean within the dynamic-scale rounding bound (0.5 ulp per
+    party, /C for the mean => 0.5/scale)."""
+    _, seeds = blinding.setup_passive_parties(K, deterministic_seed=71)
+    C = K + 1
+    key = jax.random.PRNGKey(seed)
+    E_all = jax.random.normal(key, (C, 4, 8)) * (1.0 + seed % 5)
+    masks = blinding.all_party_masks(K, seeds, (4, 8), r, "int8")
+    agg = aggregation.aggregate_int8(E_all, masks)
+    scale = float(blinding.ring_scale(jnp.max(jnp.abs(E_all)), C, "int8"))
+    np.testing.assert_allclose(np.asarray(agg),
+                               np.asarray(jnp.mean(E_all, 0)),
+                               atol=0.5 / scale + 1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(1, 100), seed=st.integers(0, 20))
+def test_int8_scale_headroom_never_overflows(K, seed):
+    """ring_scale leaves enough headroom that the TRUE C-party sum of
+    quantized embeddings stays inside [-127, 127] — the wrapped byte
+    after mask cancellation is always the true sum."""
+    C = K + 1
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (C, 16)) * 3.0
+    scale = blinding.ring_scale(jnp.max(jnp.abs(x)), C, "int8")
+    q = np.asarray(jnp.round(x.astype(jnp.float32) * scale), np.int64)
+    assert np.abs(q.sum(axis=0)).max() <= 127
+
+
+def test_int8_ring_boundary_wraps_not_clamps():
+    """Scaled values past the byte boundary WRAP (ring semantics) — a
+    clamp would silently corrupt mask cancellation."""
+    q = np.asarray(blinding.quantize_ring(jnp.asarray([200.0, -200.0]),
+                                          "int8", 1.0))
+    assert q.dtype == np.int8
+    assert np.array_equal(q, np.asarray([200 - 256, 256 - 200], np.int8))
+
+
+def test_int8_masks_look_ring_uniform():
+    """int8 pair masks draw from the full Z_256 ring (bit-preserving
+    uint8 reinterpretation), not a clamped or half-range distribution."""
+    m = np.asarray(blinding.pair_mask(12345, (4096,), 0, "int8"))
+    assert m.dtype == np.int8
+    assert m.min() < -100 and m.max() > 100
+    # every quartile of the ring is populated
+    hist, _ = np.histogram(m.astype(np.int64), bins=4, range=(-128, 128))
+    assert (hist > 4096 // 16).all(), hist
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 33))
+def test_int8_pack_words_roundtrip(n):
+    rng = np.random.default_rng(n)
+    x = rng.integers(-128, 128, size=(n,), dtype=np.int8)
+    words = blinding.pack_int8_words(x)
+    assert words.dtype == np.dtype("<i4")
+    assert words.size == (n + 3) // 4
+    np.testing.assert_array_equal(
+        blinding.unpack_int8_words(words, (n,)), x)
+
+
+def test_wire_leg_bytes_by_mode():
+    """bytes/leg: 4 per element for fp32/int32; int8 packs 4 ring bytes
+    per int32 word (ceil) + one fp32 scale per leg."""
+    assert blinding.wire_leg_bytes(8, "float") == 32
+    assert blinding.wire_leg_bytes(8, "int32") == 32
+    assert blinding.wire_leg_bytes(8, "int8") == 8 + 4
+    assert blinding.wire_leg_bytes(9, "int8") == 12 + 4
+    assert blinding.wire_elt_bytes("int8") == 1
+    assert blinding.wire_elt_bytes("int32") == 4

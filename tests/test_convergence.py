@@ -38,6 +38,58 @@ def test_convex_parties_monotone_convergence():
     assert (np.diff(smooth) < 0.01).mean() > 0.8  # near-monotone
 
 
+def _train_losses(mask_mode, engine="vectorized", steps=60):
+    """Same seed / same data / same optimizer EASTER run, varying only
+    the wire format (and engine). Returns the per-step total losses."""
+    ds = make_dataset("criteo_like", n_train=1024, n_test=256, seed=3)
+    C = 3
+    arches = [PartyArch("mlp", (), (), 16, ds.n_classes) for _ in range(C)]
+    nf = [v.shape[-1] for v in vertical_partition(ds.x_train[:1], C)]
+    sys = EasterClassifier(EasterConfig(num_passive=C - 1, d_embed=16,
+                                        mask_mode=mask_mode),
+                           arches, nf, engine=engine)
+    params = sys.init_params(jax.random.PRNGKey(0))
+    init_opt, step = sys.make_train_step("sgd", 0.2)
+    opt_state = init_opt(params)
+    it = batch_iterator(ds.x_train, ds.y_train, 256, seed=0, shuffle=False)
+    losses = []
+    for i in range(steps):
+        xb, yb = next(it)
+        xs = [jnp.asarray(v) for v in vertical_partition(xb, C)]
+        params, opt_state, total, per = step(params, opt_state, xs,
+                                             jnp.asarray(yb),
+                                             sys.masks(256, i))
+        losses.append(float(total))
+    return np.array(losses)
+
+
+def test_int8_wire_converges_like_float():
+    """Accuracy gate for the narrow-ring wire: an int8-quantized blinded
+    uplink must not change WHERE training converges — same seed, same
+    data, final smoothed loss within a small tolerance of the float
+    wire, and the int8 run still contracts on its own."""
+    f = _train_losses("float")
+    q = _train_losses("int8")
+    smooth_f = np.convolve(f, np.ones(5) / 5, mode="valid")
+    smooth_q = np.convolve(q, np.ones(5) / 5, mode="valid")
+    # int8 contracts like the convex-convergence check demands of float
+    assert smooth_q[-1] < smooth_q[0] * 0.9
+    assert (np.diff(smooth_q) < 0.01).mean() > 0.8
+    # and lands where the float wire lands (per-round dynamic scale keeps
+    # quantization noise ~0.5/scale; anything larger is a codec bug)
+    assert abs(smooth_q[-1] - smooth_f[-1]) < 0.02 * smooth_f[-1], \
+        (smooth_q[-1], smooth_f[-1])
+
+
+def test_int8_loop_and_vectorized_bit_exact():
+    """Engine parity holds at width 8: the per-round dynamic scale is
+    derived from an exact fp max, so the grouped-vmap engine reproduces
+    the per-party loop oracle BIT-EXACTLY, not just approximately."""
+    lo = _train_losses("int8", engine="loop", steps=12)
+    ve = _train_losses("int8", engine="vectorized", steps=12)
+    np.testing.assert_array_equal(lo, ve)
+
+
 def test_sgd_quadratic_contraction_rate():
     """Direct Eq. 10 shape: distance to optimum contracts geometrically."""
     A = jnp.diag(jnp.array([1.0, 2.0, 4.0]))

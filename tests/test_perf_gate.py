@@ -1,8 +1,9 @@
 """benchmarks/compare.py — the CI perf gate's regression logic.
 
 Pure-python tests (no jax): synthetic dashboard documents exercise the
-threshold, the calibration normalization, the bytes gate, lost-coverage
-detection, and the schema/config guards.
+threshold, the calibration normalization, the bytes gate, the narrow-ring
+wire-compression direction gate (int8 bytes strictly below float),
+lost-coverage detection, and the schema/config guards.
 """
 import copy
 import importlib.util
@@ -19,11 +20,13 @@ _spec.loader.exec_module(cmp_mod)
 
 
 def _doc(round_ms=10.0, mask_ms=1.0, bytes_pr=1000, cal=1.0, cs=(4, 16),
-         decode_ms=5.0, train_ms=20.0, serve_ms=6.0, serve_p99=400.0):
+         decode_ms=5.0, train_ms=20.0, serve_ms=6.0, serve_p99=400.0,
+         wires=("float",), bytes_int8=300):
     rows = [{"C": c, "engine": "vectorized", "batch": 32,
-             "use_kernel": False, "fused_masks": False,
+             "use_kernel": False, "fused_masks": False, "wire": w,
              "round_ms": round_ms, "mask_ms": mask_ms,
-             "bytes_per_round": bytes_pr} for c in cs]
+             "bytes_per_round": (bytes_int8 if w == "int8" else bytes_pr)}
+            for c in cs for w in wires]
     if decode_ms is not None:
         rows.append({"kind": "decode", "C": 4, "engine": "vectorized",
                      "batch": 2, "gen": 16,
@@ -203,6 +206,41 @@ def test_bytes_growth_fails_even_under_threshold():
     assert any("bytes_per_round" in f for f in failures)
 
 
+def test_wire_rows_key_separately():
+    """A float and an int8 sweep of the same C must gate as distinct
+    cells (row_key includes the wire discriminator)."""
+    doc = _doc(wires=("float", "int8"))
+    keys = [cmp_mod.row_key(r) for r in doc["rows"]]
+    assert len(set(keys)) == len(keys)
+
+
+def test_int8_bytes_must_stay_strictly_below_float():
+    """The wire-compression direction gate: when the new sweep carries
+    both wires for a cell, int8 bytes_per_round must be STRICTLY below
+    float — equality or growth fails even though every per-row bytes
+    gate (int8 vs int8 baseline) would pass."""
+    base = _doc(wires=("float", "int8"), bytes_int8=300)
+    good = _doc(wires=("float", "int8"), bytes_int8=300)
+    table, failures = cmp_mod.compare(base, good, 1.5)
+    assert not failures
+    assert any(r["wire"] == "int8<float" and r["ok"] for r in table)
+    # compression silently turned off: int8 rows now ship float-sized
+    # payloads in BOTH docs, so no per-row ratio moves — only the
+    # direction gate catches it
+    flat_b = _doc(wires=("float", "int8"), bytes_int8=1000)
+    flat_n = _doc(wires=("float", "int8"), bytes_int8=1000)
+    _, failures = cmp_mod.compare(flat_b, flat_n, 1.5)
+    assert any("strictly below" in f for f in failures)
+
+
+def test_wire_direction_gate_needs_both_wires():
+    """A float-only sweep (pre-narrow-ring baselines) must not trip the
+    direction gate."""
+    table, failures = cmp_mod.compare(_doc(), _doc(), 1.5)
+    assert not failures
+    assert not any(r.get("wire") == "int8<float" for r in table)
+
+
 def test_missing_row_is_lost_coverage():
     _, failures = cmp_mod.compare(_doc(cs=(4, 16)), _doc(cs=(4,)), 1.5)
     assert any("missing" in f for f in failures)
@@ -244,10 +282,25 @@ def test_committed_baseline_is_valid():
     dec = [r for r in doc["rows"] if r.get("kind") == "decode"]
     trn = [r for r in doc["rows"] if r.get("kind") == "train"]
     srv = [r for r in doc["rows"] if r.get("kind") == "serve"]
-    assert {r["C"] for r in sweep} == {4, 16, 64}
+    # the narrow-ring sweep: every C gated under BOTH wire formats
+    for wire in ("float", "int8"):
+        assert {r["C"] for r in sweep
+                if r.get("wire") == wire} == {4, 16, 64}, wire
     for r in sweep:
         for m in ("round_ms", "mask_ms", "bytes_per_round"):
             assert m in r, (r.get("C"), m)
+    # compression direction + the headline gate: int8 strictly below
+    # float at every C, and >= 3x smaller at C=64 (the acceptance bar)
+    for c in (4, 16, 64):
+        f_b = next(r["bytes_per_round"] for r in sweep
+                   if r["C"] == c and r["wire"] == "float")
+        q_b = next(r["bytes_per_round"] for r in sweep
+                   if r["C"] == c and r["wire"] == "int8")
+        assert q_b < f_b, (c, q_b, f_b)
+        if c == 64:
+            assert f_b >= 3 * q_b, (f_b, q_b)
+    # the serve tier is swept under both wires too
+    assert {r.get("wire", "float") for r in srv} >= {"float", "int8"}
     # v2: the fused scan-decode throughput row must be present + gated
     assert dec, "baseline lost the decode tokens/sec row"
     for r in dec:

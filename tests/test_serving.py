@@ -113,7 +113,7 @@ def _drain(decode_fn, params, state):
 
 
 @pytest.mark.parametrize("engine", ENGINES)
-@pytest.mark.parametrize("mask_mode", ["float", "int32"])
+@pytest.mark.parametrize("mask_mode", ["float", "int32", "int8"])
 @pytest.mark.parametrize("fresh_masks", [True, False])
 def test_batched_matches_single_stream(setup, engine, mask_mode,
                                        fresh_masks):
@@ -182,14 +182,17 @@ def test_serve_round_layout():
         [int(blinding.serve_round(n, 4)) for n in (0, 3, 7)])
 
 
-def test_stream_rounds_pairwise_disjoint(setup):
+@pytest.mark.parametrize("mask_mode", ["float", "int8"])
+def test_stream_rounds_pairwise_disjoint(setup, mask_mode):
     """Transcript audit over a real ServingEngine run: reconstruct every
     PRF round each request consumed (prefill + one serve round per
     decoded token at its positions) and require the per-request sets to
     be pairwise disjoint and outside the TRAIN domain — two requests
-    sharing a pad round would let the aggregator difference them."""
+    sharing a pad round would let the aggregator difference them (the
+    narrow int8 ring reuses the same nonce schedule, so it gets the
+    same audit)."""
     params, pool = setup
-    sys_ = _lm("vectorized")
+    sys_ = _lm("vectorized", mask_mode)
     eng = serving.ServingEngine(sys_, params, lanes=2, max_len=MAX_LEN,
                                 chunk=CHUNK, donate=False)
     reqs = _requests(pool, n=5, budgets=(2, 4, 3, 1, 4))
@@ -247,6 +250,42 @@ def test_frozen_lane_uplink_is_zero(setup, monkeypatch):
         assert np.any(E_all[:, 0]) and np.any(E_all[:, 2])
         if masks is not None:
             assert not np.any(masks[:, 1]), "frozen lane mask nonzero"
+
+
+def test_frozen_lane_uplink_is_zero_int8(setup, monkeypatch):
+    """int8 twin of the frozen-lane spy: the narrow-ring serve round
+    routes through aggregation.aggregate_ring — a frozen lane's
+    embedding row AND int8 mask row must be exact ring zeros there, so
+    its quantized wire row is the zero byte; live lanes' masks still
+    span the ring (blinding really happened at width 8)."""
+    params, pool = setup
+    sys_ = _lm("vectorized", "int8")
+    seeds = sys_.mask_seeds()
+    caches = sys_.init_caches(R, MAX_LEN, per_lane=True)
+    captured = []
+    orig = aggregation.aggregate_ring
+
+    def spy(E_all, masks, mode, scale=None):
+        captured.append((np.asarray(E_all), np.asarray(masks), mode))
+        return orig(E_all, masks, mode, scale)
+
+    monkeypatch.setattr(aggregation, "aggregate_ring", spy)
+    tok = jnp.asarray(pool[:R, :1], jnp.int32)
+    lane_mask = jnp.asarray([True, False, True])
+    nonces = jnp.arange(R, dtype=jnp.int32)
+    pos = jnp.zeros((R,), jnp.int32)
+    sys_.serve_step(params, tok, caches, pos, seeds,
+                    lane_mask=lane_mask, nonces=nonces)
+    assert captured, "int8 serve_step did not reach aggregate_ring"
+    for E_all, masks, mode in captured:
+        assert mode == "int8"
+        assert masks.dtype == np.int8
+        assert not np.any(E_all[:, 1]), "frozen lane embeds nonzero"
+        assert not np.any(masks[:, 1]), "frozen lane mask nonzero"
+        assert np.any(E_all[:, 0]) and np.any(E_all[:, 2])
+        live = masks[:, [0, 2]].astype(np.int64)
+        assert live.min() < -64 and live.max() > 64, \
+            "live-lane int8 masks do not span the ring"
 
 
 def test_frozen_lane_cache_and_output(setup):

@@ -82,3 +82,95 @@ def test_wire_transcript_contains_only_blinded_embeddings():
     # and nothing else on the uplink is embedding-shaped raw data
     kinds = {t[1] for t in sys.transcript if t[0] == "passive->active"}
     assert kinds == {"blinded_embed", "prediction"}
+
+
+def test_wire_int8_protocol_trains():
+    """Narrow-ring deployment: the full multi-process protocol still
+    trains when every leg ships packed int8 ring words."""
+    ds = make_dataset("mnist_like", n_train=512, n_test=128, seed=1)
+    C = 3
+    xs_all = vertical_partition(ds.x_train, C, ds.image_hw)
+    nf = [v.shape[-1] for v in xs_all]
+    arches = [PartyArch("mlp", (64,), (32,), 32, ds.n_classes)
+              for _ in range(C)]
+    sys = WireEaster(arches, nf, ds.n_classes, lr=3e-3, mask_mode="int8")
+    sys.start()
+    try:
+        it = batch_iterator(ds.x_train, ds.y_train, 128, seed=0)
+        first = None
+        for r in range(15):
+            xb, yb = next(it)
+            losses = sys.round(vertical_partition(xb, C, ds.image_hw),
+                               yb, r)
+            if first is None:
+                first = sum(losses)
+        assert sum(losses) < first, (first, losses)
+        xs_te = vertical_partition(ds.x_test, C, ds.image_hw)
+        acc = sys.evaluate(xs_te, ds.y_test)
+        assert (acc > 0.3).all(), acc
+    finally:
+        sys.stop()
+
+
+def test_wire_int8_transcript_is_packed_ring_words():
+    """int8 transcript audit: the uplink carries ONLY packed int32 ring
+    words (+ the scalar amax of phase 1 and int8-framed predictions) —
+    never fp32 embedding bytes — and the unpacked bytes look ring-uniform
+    (the masks dominate), not like a quantized raw embedding."""
+    from repro.core import blinding
+
+    ds = make_dataset("mnist_like", n_train=256, n_test=64, seed=2)
+    C = 3
+    xs_all = vertical_partition(ds.x_train, C, ds.image_hw)
+    nf = [v.shape[-1] for v in xs_all]
+    arches = [PartyArch("mlp", (32,), (16,), 24, ds.n_classes)
+              for _ in range(C)]
+    seed = 0
+    sys = WireEaster(arches, nf, ds.n_classes, lr=3e-3, seed=seed,
+                     record_transcript=True, mask_mode="int8")
+    xb, yb = ds.x_train[:64], ds.y_train[:64]
+    xs = vertical_partition(xb, C, ds.image_hw)
+    sys.start()
+    try:
+        losses = [sum(sys.round(xs, yb, r)) for r in range(3)]
+    finally:
+        sys.stop()
+    assert losses[-1] < losses[0], losses
+
+    # the uplink kind set: nothing raw, nothing fp32-embedding-shaped
+    kinds = {t[1] for t in sys.transcript if t[0] == "passive->active"}
+    assert kinds == {"embed_amax", "blinded_embed", "prediction"}
+
+    embeds = [t for t in sys.transcript if t[1] == "blinded_embed"]
+    assert len(embeds) == 3 * (C - 1)
+    n_elts = 64 * arches[1].d_embed
+    for (_, _, _, party, payload) in embeds:
+        # wire payload is packed int32 words, 4 ring bytes per word
+        assert payload.dtype == np.dtype("<i4")
+        assert payload.size == (n_elts + 3) // 4
+        q = blinding.unpack_int8_words(payload, (n_elts,))
+        # ring-uniform-looking: masks push bytes across the full ring
+        assert q.min() < -100 and q.max() > 100
+        hist, _ = np.histogram(q.astype(np.int64), bins=4,
+                               range=(-128, 128))
+        assert (hist > n_elts // 16).all(), hist
+    # out-of-band: masks cancel across the round-0 uplink mod 256, so the
+    # PAIR of payloads still sums to the quantized embeddings — blinded,
+    # not corrupted (ring analogue of the float delta-cancellation check)
+    round0 = [t for t in embeds if t[2] == 0]
+    q_sum = sum(blinding.unpack_int8_words(t[4], (n_elts,)).astype(np.int64)
+                for t in round0)
+    raw_sum = np.zeros(n_elts)
+    for k in range(1, C):
+        p_k = init_party(jax.random.PRNGKey(seed + k), arches[k], nf[k])
+        raw_sum = raw_sum + np.asarray(
+            embed_fn(p_k, arches[k], jax.numpy.asarray(xs[k]))).reshape(-1)
+    amaxes = [float(t[4]) for t in sys.transcript
+              if t[1] == "embed_amax" and t[2] == 0]
+    amax_a = float(np.abs(np.asarray(embed_fn(
+        init_party(jax.random.PRNGKey(seed), arches[0], nf[0]),
+        arches[0], jax.numpy.asarray(xs[0])))).max())
+    scale = float(blinding.ring_scale(max([amax_a] + amaxes), C, "int8"))
+    wrapped = ((q_sum + 128) % 256) - 128        # ring sum of the K rows
+    np.testing.assert_allclose(wrapped / scale, raw_sum,
+                               atol=0.5 * (C - 1) / scale + 1e-6)
